@@ -1,0 +1,89 @@
+"""Shared benchmark helpers: timing, subprocess fan-out over device counts,
+CSV emission (format: name,us_per_call,derived)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def emit(name: str, us_per_call: float, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def run_sub(module: str, devices: int, *args, timeout=560):
+    """Run a benchmark module in a subprocess with N host devices; returns its
+    stdout (the module prints CSV lines)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + ROOT
+    cmd = [sys.executable, "-m", module] + [str(a) for a in args]
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env, cwd=ROOT)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-2000:])
+        return f"{module},-1,ERROR\n"
+    return proc.stdout
+
+
+# paper record sizes (bytes) for Table I/II accounting
+PAPER_BYTES = {
+    "old_request": 17, "new_request": 42, "new_response": 9,
+    "spike_id": 8, "rate": 4, "tree_node": 32,
+}
+
+
+def brain_sim(cfg_overrides, chunks=2, stats_only=False):
+    """Build + run the brain sim on whatever devices exist; returns
+    (time_per_chunk_s, final_state)."""
+    import dataclasses
+    import jax
+    from repro.configs.msp_brain import BrainConfig
+    from repro.core import engine
+    cfg = BrainConfig(**cfg_overrides)
+    mesh = engine.make_brain_mesh()
+    init_fn, chunk = engine.build_sim(cfg, mesh)
+    st = init_fn()
+    st = chunk(st)  # warmup/compile + first plasticity round
+    jax.block_until_ready(st.positions)
+    t0 = time.perf_counter()
+    for _ in range(chunks):
+        st = chunk(st)
+    jax.block_until_ready(st.positions)
+    dt = (time.perf_counter() - t0) / chunks
+    return dt, st
+
+
+def paper_bytes_from_stats(stats, alg_conn: str, alg_spike: str,
+                           num_ranks: int):
+    """Tables I/II accounting with the paper's record sizes."""
+    s = {k: float(v.sum()) for k, v in stats.items()}
+    b = 0.0
+    if alg_conn == "new":
+        b += s["bh_requests"] * PAPER_BYTES["new_request"]
+        b += s["bh_requests"] * PAPER_BYTES["new_response"]
+    else:
+        b += s["formation_requests"] * (PAPER_BYTES["old_request"] + 1)
+        b += s["tree_nodes_downloaded"] * PAPER_BYTES["tree_node"]
+    if alg_spike == "new":
+        b += s["rates_sent"] * PAPER_BYTES["rate"] * max(num_ranks - 1, 0)
+    else:
+        b += s["spikes_sent"] * PAPER_BYTES["spike_id"] * max(num_ranks - 1, 0)
+    return b, s

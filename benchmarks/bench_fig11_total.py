@@ -1,0 +1,26 @@
+"""Paper Fig. 11 / §V-E: total simulation time, all-old vs all-new algorithm
+pairs, largest feasible local configuration."""
+import sys
+
+from benchmarks._util import brain_sim, emit
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 512
+    import jax
+    r = len(jax.devices())
+    times = {}
+    for conn, spike, tag in (("old", "old", "old"), ("new", "new", "new")):
+        dt, st = brain_sim(dict(
+            neurons_per_rank=n, local_levels=4, frontier_cap=64,
+            max_synapses=32, connectivity_alg=conn, spike_alg=spike,
+            requests_cap_factor=1), chunks=2)
+        times[tag] = dt
+    red = 100 * (1 - times["new"] / times["old"])
+    emit(f"fig11_total_old_r{r}_n{n}", times["old"] * 1e6)
+    emit(f"fig11_total_new_r{r}_n{n}", times["new"] * 1e6,
+         f"walltime_reduction={red:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Fig. 4: spike-transmission time, per-step spiked-ID exchange vs
+Delta-periodic rate exchange. The chunk is dominated by the activity phase
+(rate_period=100, connectivity barely active)."""
+import sys
+
+from benchmarks._util import brain_sim, emit
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    import jax
+    r = len(jax.devices())
+    times = {}
+    for alg in ("old", "new"):
+        dt, st = brain_sim(dict(
+            neurons_per_rank=n, local_levels=3, frontier_cap=32,
+            max_synapses=16, connectivity_alg="new", spike_alg=alg,
+            rate_period=100, requests_cap_factor=max(r, 4)), chunks=2)
+        times[alg] = dt
+    emit(f"fig4_spikes_old_r{r}_n{n}", times["old"] * 1e6)
+    emit(f"fig4_spikes_new_r{r}_n{n}", times["new"] * 1e6,
+         f"speedup={times['old'] / times['new']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

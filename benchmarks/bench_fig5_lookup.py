@@ -1,0 +1,37 @@
+"""Paper Fig. 5: receive-side cost — binary-search ID lookup (old) vs PRNG
+reconstruction (new). Micro-benchmark of the two jitted receive paths on one
+device (the paper reports new is ~1.5x slower here; the Fig. 4 win dwarfs it).
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import emit, time_fn
+from repro.core import spikes
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 4096
+    s_max = 32
+    r = 4
+    key = jax.random.key(0)
+    in_edges = jax.random.randint(key, (n, s_max), 0, r * n).astype(jnp.int32)
+    spiked = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.05, (n,))
+    gid = jnp.arange(n, dtype=jnp.int32)
+    ids = jnp.sort(jnp.where(spiked, gid, jnp.iinfo(jnp.int32).max))
+    all_ids = jnp.tile(ids[None], (r, 1))
+    rates = jnp.full((r, n), 0.05, jnp.float32)
+
+    lookup = jax.jit(lambda: spikes.lookup_spikes(all_ids, in_edges, n))
+    recon = jax.jit(lambda: spikes.reconstruct_spikes(
+        key, 7, rates, in_edges, 0, n))
+    t_old, _ = time_fn(lookup, iters=10)
+    t_new, _ = time_fn(recon, iters=10)
+    emit(f"fig5_lookup_search_n{n}", t_old * 1e6)
+    emit(f"fig5_lookup_prng_n{n}", t_new * 1e6,
+         f"prng/search={t_new / t_old:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Benchmark harness — one benchmark per paper table/figure (+ beyond-paper
+LM benches). Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick pass
+  PYTHONPATH=src python -m benchmarks.run --scaling  # + weak-scaling sweep
+"""
+import sys
+
+from benchmarks._util import run_sub
+
+
+def main() -> None:
+    scaling = "--scaling" in sys.argv
+    print("name,us_per_call,derived")
+    # paper figures/tables (brain sim), reduced CPU scale
+    rank_counts = (1, 2, 4, 8) if scaling else (4,)
+    for r in rank_counts:
+        sys.stdout.write(run_sub("benchmarks.bench_fig3_connectivity", r, 256))
+        sys.stdout.write(run_sub("benchmarks.bench_fig4_spikes", r, 256))
+    sys.stdout.write(run_sub("benchmarks.bench_fig5_lookup", 1, 4096))
+    sys.stdout.write(run_sub("benchmarks.bench_tab12_bytes", 4, 256))
+    sys.stdout.write(run_sub("benchmarks.bench_fig11_total", 4, 512))
+    sys.stdout.write(run_sub("benchmarks.bench_fig89_quality", 8))
+    # beyond-paper: the technique inside the LM framework
+    sys.stdout.write(run_sub("benchmarks.bench_lm_moe", 8))
+    sys.stdout.write(run_sub("benchmarks.bench_decode_splitkv", 8))
+
+
+if __name__ == "__main__":
+    main()

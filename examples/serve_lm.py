@@ -1,0 +1,55 @@
+"""Batched serving example: prefill + KV-cache decode across architectures
+(full attention, ring-window hybrid, recurrent) with one API.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def serve(arch, batch_size=4, prompt=24, gen=12):
+    cfg = get_smoke_config(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(key, (batch_size, prompt), 0,
+                                          cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (batch_size, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (batch_size, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    t0 = time.time()
+    logits, state = api.prefill(params, batch,
+                                pad_cache_to=extra + prompt + gen)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    decode = jax.jit(lambda p, s, t: api.decode_step(p, s, t))
+    outs = [tok]
+    for _ in range(gen - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs.append(tok)
+    jax.block_until_ready(tok)
+    toks = jnp.stack(outs, 1)
+    print(f"{arch:22s} {batch_size}x{prompt}+{gen}: {time.time() - t0:5.1f}s  "
+          f"sample={toks[0, :6].tolist()}")
+
+
+def main():
+    for arch in ("qwen3-14b", "recurrentgemma-2b", "xlstm-125m",
+                 "whisper-base"):
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, ParallelConfig, ShapeConfig,
+                                SHAPES, applicable_shapes, supports_long_context)
+
+# arch id -> module name
+_ARCH_MODULES = {
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "arctic-480b":         "arctic_480b",
+    "qwen2-7b":            "qwen2_7b",
+    "starcoder2-15b":      "starcoder2_15b",
+    "qwen3-14b":           "qwen3_14b",
+    "chatglm3-6b":         "chatglm3_6b",
+    "whisper-base":        "whisper_base",
+    "llava-next-34b":      "llava_next_34b",
+    "xlstm-125m":          "xlstm_125m",
+    "recurrentgemma-2b":   "recurrentgemma_2b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).SMOKE_CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

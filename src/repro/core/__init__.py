@@ -1,0 +1,5 @@
+# The paper's primary contribution: MSP structural-plasticity simulation with
+# the location-aware Barnes-Hut connectivity update ("move computation instead
+# of data") and the Delta-periodic firing-rate spike approximation.
+from repro.core import (barnes_hut, connectivity, engine, morton, neuron,
+                        octree, spikes)

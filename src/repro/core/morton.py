@@ -1,0 +1,83 @@
+"""Morton (Z-order) codes over the unit cube and the rank decomposition.
+
+The simulation domain [0,1]^3 is split at the *branch level* b — the smallest
+b with 8^b >= R ranks — into 8^b subdomains indexed by their Morton code.
+Each rank owns ``8^b // R`` consecutive subdomains (1, 2 or 4 for power-of-two
+R), exactly the decomposition of the paper (§III-B0a).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_LEVEL = 9  # 2^27 cells max — plenty below float32 position resolution
+
+
+def branch_level(num_ranks: int) -> int:
+    """Smallest b with 8^b >= R (paper: 8^(b-1) <= k < 8^b with k rounded up)."""
+    b = 0
+    while 8 ** b < num_ranks:
+        b += 1
+    return max(b, 1) if num_ranks > 1 else 0
+
+
+def cells_per_rank(num_ranks: int) -> int:
+    return 8 ** branch_level(num_ranks) // num_ranks
+
+
+def _part1by2(x):
+    """Spread bits of x so there are two zeros between each (for interleave)."""
+    x = x.astype(jnp.uint32)
+    x &= jnp.uint32(0x3FF)
+    x = (x | (x << 16)) & jnp.uint32(0x030000FF)
+    x = (x | (x << 8)) & jnp.uint32(0x0300F00F)
+    x = (x | (x << 4)) & jnp.uint32(0x030C30C3)
+    x = (x | (x << 2)) & jnp.uint32(0x09249249)
+    return x
+
+
+def _compact1by2(x):
+    x = x.astype(jnp.uint32) & jnp.uint32(0x09249249)
+    x = (x ^ (x >> 2)) & jnp.uint32(0x030C30C3)
+    x = (x ^ (x >> 4)) & jnp.uint32(0x0300F00F)
+    x = (x ^ (x >> 8)) & jnp.uint32(0x030000FF)
+    x = (x ^ (x >> 16)) & jnp.uint32(0x000003FF)
+    return x
+
+
+def morton_encode(pos, level: int):
+    """pos: (..., 3) in [0,1) -> Morton cell index at ``level`` (int32)."""
+    g = 1 << level
+    ijk = jnp.clip((pos * g).astype(jnp.int32), 0, g - 1)
+    code = (_part1by2(ijk[..., 0]) | (_part1by2(ijk[..., 1]) << 1)
+            | (_part1by2(ijk[..., 2]) << 2))
+    return code.astype(jnp.int32)
+
+
+def morton_cell_center(cell, level: int):
+    """cell index at ``level`` -> center position (..., 3)."""
+    c = cell.astype(jnp.uint32)
+    i = _compact1by2(c)
+    j = _compact1by2(c >> 1)
+    k = _compact1by2(c >> 2)
+    g = float(1 << level)
+    return (jnp.stack([i, j, k], axis=-1).astype(jnp.float32) + 0.5) / g
+
+
+def cell_size(level: int) -> float:
+    """Cell edge length at octree level (cube => single scalar)."""
+    return 1.0 / (1 << level)
+
+
+def sample_positions_in_cells(key, base_cell: int, n_cells: int, n: int,
+                              level: int):
+    """Uniformly sample n positions within Morton cells
+    [base_cell, base_cell + n_cells) at ``level`` (a rank's subdomains)."""
+    kc, kp = jax.random.split(key)
+    cells = base_cell + jax.random.randint(kc, (n,), 0, n_cells)
+    centers = morton_cell_center(cells, level)
+    off = (jax.random.uniform(kp, (n, 3)) - 0.5) * cell_size(level)
+    return jnp.clip(centers + off, 0.0, 1.0 - 1e-6)

@@ -1,0 +1,77 @@
+"""MSP phase 1+2: electrical activity (Izhikevich), calcium trace, and
+synaptic-element growth (paper §III-A; parameters from §V-D)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.msp_brain import BrainConfig
+
+
+class NeuronState(NamedTuple):
+    v: jnp.ndarray          # (n,) membrane potential
+    u: jnp.ndarray          # (n,) recovery variable
+    calcium: jnp.ndarray    # (n,) intracellular calcium (activity trace)
+    ax_elements: jnp.ndarray   # (n,) axonal synaptic elements (continuous)
+    de_elements: jnp.ndarray   # (n,) dendritic synaptic elements
+    spiked: jnp.ndarray     # (n,) bool — fired in the *last* step
+    spike_count: jnp.ndarray   # (n,) spikes in the current rate window
+    rate: jnp.ndarray       # (n,) advertised firing rate (new algorithm)
+    is_excitatory: jnp.ndarray  # (n,) bool
+
+
+def init_neurons(key, cfg: BrainConfig, n: int) -> NeuronState:
+    k1, k2 = jax.random.split(key)
+    vac = jax.random.uniform(k1, (n, 2), minval=cfg.initial_vacant_low,
+                             maxval=cfg.initial_vacant_high)
+    exc = jnp.arange(n) < int(n * cfg.fraction_excitatory)
+    return NeuronState(
+        v=jnp.full((n,), cfg.izh_c, jnp.float32),
+        u=jnp.full((n,), cfg.izh_b * cfg.izh_c, jnp.float32),
+        calcium=jnp.zeros((n,), jnp.float32),
+        ax_elements=vac[:, 0], de_elements=vac[:, 1],
+        spiked=jnp.zeros((n,), bool),
+        spike_count=jnp.zeros((n,), jnp.float32),
+        rate=jnp.zeros((n,), jnp.float32),
+        is_excitatory=exc)
+
+
+def izhikevich_step(st: NeuronState, syn_input, noise, cfg: BrainConfig):
+    """One 1 ms step (two 0.5 ms Euler halves for stability, as in the
+    reference Izhikevich implementation)."""
+    i_t = syn_input + noise
+    v, u = st.v, st.u
+    for _ in range(2):
+        v = v + 0.5 * (0.04 * v * v + 5.0 * v + 140.0 - u + i_t)
+    u = u + cfg.izh_a * (cfg.izh_b * v - u)
+    spiked = v >= 30.0
+    v = jnp.where(spiked, cfg.izh_c, v)
+    u = jnp.where(spiked, u + cfg.izh_d, u)
+    return v, u, spiked
+
+
+def update_activity(st: NeuronState, syn_input, noise,
+                    cfg: BrainConfig) -> NeuronState:
+    v, u, spiked = izhikevich_step(st, syn_input, noise, cfg)
+    calcium = st.calcium + (-st.calcium * cfg.calcium_decay
+                            + cfg.calcium_beta * spiked)
+    return st._replace(v=v, u=u, spiked=spiked, calcium=calcium,
+                       spike_count=st.spike_count + spiked)
+
+
+def update_elements(st: NeuronState, cfg: BrainConfig) -> NeuronState:
+    """Homeostasis: grow elements below target calcium, retract above
+    (paper §III-A(b); linear rule with nu = element_growth_rate)."""
+    drive = 1.0 - st.calcium / cfg.target_calcium
+    grow = cfg.element_growth_rate * drive
+    return st._replace(
+        ax_elements=jnp.maximum(st.ax_elements + grow, 0.0),
+        de_elements=jnp.maximum(st.de_elements + grow, 0.0))
+
+
+def refresh_rate(st: NeuronState, cfg: BrainConfig) -> NeuronState:
+    """Close a rate window: advertised rate = spikes / Delta (new algorithm)."""
+    rate = st.spike_count / cfg.rate_period
+    return st._replace(rate=rate, spike_count=jnp.zeros_like(st.spike_count))

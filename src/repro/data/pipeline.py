@@ -1,0 +1,115 @@
+"""Deterministic synthetic token pipeline: sharded, double-buffered, seekable.
+
+Production shape: each DP shard materializes only its slice of the global
+batch; ``state = (seed, step)`` makes the stream exactly resumable from a
+checkpoint (data order survives restarts AND elastic resharding, because
+sample identity depends only on (seed, global step, global row index)).
+
+The generator is a structured Zipf-ish Markov stream (not iid uniform) so
+cross-entropy actually decreases during the example training runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    # Markov structure: tok_{t+1} = (a * tok_t + drift) % V with noise
+    noise_p: float = 0.15
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized splitmix64 — stateless hash, so sample identity depends only
+    on (seed, step, row, t): sharding/elastic-resume reproduce exact streams."""
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        x = ((x ^ (x >> np.uint64(30)))
+             * np.uint64(0xBF58476D1CE4E5B9)).astype(np.uint64)
+        x = ((x ^ (x >> np.uint64(27)))
+             * np.uint64(0x94D049BB133111EB)).astype(np.uint64)
+        return x ^ (x >> np.uint64(31))
+
+
+PATTERN_LEN = 8
+
+
+def _batch_for_step(cfg: DataConfig, step: int, rows: np.ndarray):
+    """Deterministic rows of the global batch (row identity is global).
+
+    Each row repeats a per-(row, step) pattern of PATTERN_LEN tokens with
+    noise_p corruption — learnable by induction (copy from t-8), so example
+    training runs show real loss curves down to the noise floor."""
+    v = cfg.vocab_size
+    rows = rows.astype(np.uint64)
+    base = (np.uint64(cfg.seed) * np.uint64(0x1000003)
+            + np.uint64(step) * np.uint64(0x10001)).astype(np.uint64)
+    pi = np.arange(PATTERN_LEN, dtype=np.uint64)
+    pattern = _splitmix64(base[None] + rows[:, None] * np.uint64(7919)
+                          + pi[None, :] * np.uint64(104_729)) % np.uint64(v)
+    ts = np.arange(cfg.seq_len, dtype=np.uint64)
+    h = _splitmix64(base[None] + rows[:, None] * np.uint64(65_537)
+                    + ts[None, :] * np.uint64(257))
+    noise = (h % np.uint64(10_000)) < np.uint64(int(cfg.noise_p * 10_000))
+    rand = _splitmix64(h) % np.uint64(v)
+    toks = pattern[:, (np.arange(cfg.seq_len) % PATTERN_LEN)]
+    toks = np.where(noise, rand, toks)
+    return toks.astype(np.int32)
+
+
+class TokenPipeline:
+    """Iterator of {'tokens': (B_local, S)} with background prefetch."""
+
+    def __init__(self, cfg: DataConfig, shard_index: int = 0,
+                 num_shards: int = 1, start_step: int = 0, prefetch: int = 2,
+                 sharding=None):
+        assert cfg.global_batch % num_shards == 0
+        self.cfg = cfg
+        self.rows = np.arange(cfg.global_batch)[
+            shard_index::num_shards] if num_shards > 1 else \
+            np.arange(cfg.global_batch)
+        self.step = start_step
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+
+    def _producer(self):
+        step = self.step
+        while not self._stop.is_set():
+            batch = _batch_for_step(self.cfg, step, self.rows)
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator[dict]:
+        return self
+
+    def __next__(self) -> dict:
+        step, batch = self._q.get()
+        self.step = step + 1
+        arr = jnp.asarray(batch)
+        if self.sharding is not None:
+            arr = jax.device_put(arr, self.sharding)
+        return {"tokens": arr}
+
+    def state(self) -> dict:
+        return {"seed": self.cfg.seed, "step": self.step}
+
+    def close(self):
+        self._stop.set()
+        try:
+            self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,113 @@
+"""Pallas TPU flash-attention forward (causal / sliding-window, GQA-aware).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks); the kv dimension is innermost and
+sequential on TPU, so (m, l, acc) live in VMEM scratch across kv steps.
+BlockSpec index maps pull the matching KV head for GQA (kv_head = q_head // g)
+without materializing repeated K/V. Fully-masked causal tiles are skipped via
+pl.when — on TPU that prunes ~half the kv loop.
+
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py);
+on-device it replaces the pure-JAX chunked attention in models/attention.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: int, bq: int, bk: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    # tile-level skip: causal tile fully above the diagonal / out of window
+    live = True
+    if causal:
+        live = (ki * bk) <= (qi * bq + bq - 1)
+    if window and window > 0:
+        live = live & ((qi * bq) - (ki * bk + bk - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                                   # (bq, d)
+        k = k_ref[0, 0]                                   # (bk, d)
+        v = v_ref[0, 0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        ok = jnp.ones((bq, bk), bool)
+        if causal:
+            ok &= k_pos <= q_pos
+        if window and window > 0:
+            ok &= q_pos - k_pos < window
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, block_q=128,
+                        block_k=128, interpret=False):
+    """q: (B, Hq, S, D); k, v: (B, Hkv, S, D) -> (B, Hq, S, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    while sq % bq:
+        bq -= 1
+    while skv % bk:
+        bk -= 1
+    grid = (b, hq, sq // bq, skv // bk)
+    scale = 1.0 / math.sqrt(d)
+
+    kern = functools.partial(_kernel, causal=causal, window=window,
+                             bq=bq, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g_=g: (b_, h // g_, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h, qi, ki, g_=g: (b_, h // g_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

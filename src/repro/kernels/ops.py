@@ -1,0 +1,43 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run with interpret=True (the kernel body is
+executed in Python per grid step — correctness only). On TPU, set
+``REPRO_PALLAS=device`` (or pass interpret=False) for the compiled path.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.bh_gauss import bh_gauss_probs
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.neuron_step import neuron_step
+
+
+def _interpret_default() -> bool:
+    if os.environ.get("REPRO_PALLAS", "") == "device":
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "interpret"))
+def gauss_probs(x, y, w, *, sigma: float, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return bh_gauss_probs(x, y, w, sigma=sigma, interpret=interpret)
+
+
+def fused_neuron_step(v, u, ca, ax, de, inp, cfg, *, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return neuron_step(v, u, ca, ax, de, inp, cfg, interpret=interpret)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Naive full-softmax attention. q: (B,Hq,S,D); k,v: (B,Hkv,S,D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window and window > 0:
+        ok &= qpos - kpos < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def bh_gauss_ref(x, y, w, *, sigma: float):
+    """P[i,j] = w_j exp(-||x_i-y_j||^2/sigma^2) and its row sums."""
+    d2 = jnp.sum(jnp.square(x[:, None, :].astype(jnp.float32)
+                            - y[None, :, :].astype(jnp.float32)), axis=-1)
+    p = w[None, :].astype(jnp.float32) * jnp.exp(-d2 / (sigma * sigma))
+    return p, jnp.sum(p, axis=-1)
+
+
+def neuron_step_ref(v, u, ca, ax, de, inp, cfg):
+    """Mirror of repro.core.neuron.update_activity + update_elements."""
+    for _ in range(2):
+        v = v + 0.5 * (0.04 * v * v + 5.0 * v + 140.0 - u + inp)
+    u = u + cfg.izh_a * (cfg.izh_b * v - u)
+    spiked = v >= 30.0
+    v = jnp.where(spiked, cfg.izh_c, v)
+    u = jnp.where(spiked, u + cfg.izh_d, u)
+    ca = ca + (-ca * cfg.calcium_decay + cfg.calcium_beta * spiked)
+    drive = cfg.element_growth_rate * (1.0 - ca / cfg.target_calcium)
+    ax = jnp.maximum(ax + drive, 0.0)
+    de = jnp.maximum(de + drive, 0.0)
+    return v, u, ca, ax, de, spiked

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state; meshes are built only
+inside the factory functions. The dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax import
+(see dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips ('data','model').
+    Multi-pod: 2x16x16 = 512 chips ('pod','data','model')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary test mesh, e.g. ((2,4), ('data','model')) on host devices."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(shape))
+
+
+# TPU v5e hardware model for the roofline (targets, not the CPU runtime)
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link (~4 links usable per chip)
+    "hbm_bytes": 16e9,
+}

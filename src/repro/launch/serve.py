@@ -1,0 +1,75 @@
+"""Serving driver: batched prefill + decode with the KV-cache machinery.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import build_model
+from repro.parallel import sharding as shd
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--greedy", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    da, mo = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((da, mo), ("data", "model"))
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    max_seq = args.prompt_len + args.gen
+
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+
+    prefill = jax.jit(make_prefill_step(api, mesh),
+                      static_argnames=())
+    decode = jax.jit(make_decode_step(api, mesh), donate_argnums=(1,))
+
+    t0 = time.time()
+    with shd.use_mesh(mesh):
+        logits, state = api.prefill(params, batch, mesh,
+                                    pad_cache_to=max_seq)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t_prefill = time.time() - t0
+    out = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, state = decode(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_dec = time.time() - t0
+    gen = jnp.stack(out, 1)
+    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decoded {args.gen - 1} steps in {t_dec:.2f}s "
+          f"({(args.gen - 1) * args.batch / max(t_dec, 1e-9):.1f} tok/s)")
+    print("sample generations:", gen[:2].tolist())
+
+
+if __name__ == "__main__":
+    main()

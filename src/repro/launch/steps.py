@@ -1,0 +1,51 @@
+"""jit-able step functions (train / prefill / decode) shared by the dry-run,
+the training driver, and the benchmarks."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.optim.optimizer import OptimizerConfig, adamw_update, init_opt_state
+from repro.parallel import sharding as shd
+
+
+def make_train_step(api, mesh, opt_cfg: OptimizerConfig):
+    layout = api.cfg.parallel.layout
+
+    def train_step(params, opt_state, batch):
+        with shd.use_mesh(mesh, layout):
+            def lf(p):
+                loss, metrics = api.loss(p, batch, mesh)
+                return loss, metrics
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            params, opt_state, stats = adamw_update(params, grads, opt_state,
+                                                    opt_cfg)
+        out = dict(metrics)
+        out.update(stats)
+        out["loss"] = loss
+        return params, opt_state, out
+    return train_step
+
+
+def make_prefill_step(api, mesh):
+    def prefill_step(params, batch):
+        with shd.use_mesh(mesh):
+            return api.prefill(params, batch, mesh)
+    return prefill_step
+
+
+def make_decode_step(api, mesh):
+    def decode_step(params, state, tokens):
+        with shd.use_mesh(mesh):
+            return api.decode_step(params, state, tokens, mesh)
+    return decode_step
+
+
+def opt_config_for(cfg: ModelConfig, *, steps: int = 10_000) -> OptimizerConfig:
+    warm = max(min(steps // 10, 100), 5)
+    return OptimizerConfig(state_dtype=cfg.parallel.opt_state_dtype,
+                           lr=1e-3, warmup_steps=warm, total_steps=steps)

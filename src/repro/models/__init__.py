@@ -1,0 +1,2 @@
+from repro.models.model import (ModelAPI, build_model, decode_state_specs,
+                                input_specs, param_specs)

@@ -1,0 +1,159 @@
+"""Attention: chunked (flash-style, online-softmax) full/causal/local attention in
+pure JAX, GQA, decode attention, and the split-KV sharded decode combine.
+
+Memory model: scores are never materialized beyond (q_chunk x kv_chunk) tiles, so
+32k-token prefill fits HBM without a fused kernel; the Pallas flash kernel in
+``repro.kernels.flash_attention`` is the TPU-optimized version of the same math
+(validated against ``repro.kernels.ref``).
+
+``split_kv_decode`` is the paper's move-compute pattern applied to serving: each
+model-axis shard computes partial attention over its slice of the KV cache and
+only the tiny (o, m, l) triple crosses the interconnect — the 9-byte-response
+analogue — instead of gathering the multi-GB cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_heads(q, num_kv_heads):
+    """(B, Hq, S, D) -> (B, Hkv, G, S, D) for GQA."""
+    b, hq, s, d = q.shape
+    g = hq // num_kv_heads
+    return q.reshape(b, num_kv_heads, g, s, d)
+
+
+def _softcap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int):
+    """(Sq, Skv) additive bias from position vectors."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= kv_pos[None, :] <= q_pos[:, None]
+    if window and window > 0:
+        ok &= q_pos[:, None] - kv_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_positions=None,
+                      kv_positions=None, q_chunk=1024, kv_chunk=1024,
+                      softcap=0.0):
+    """Online-softmax attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D). Returns (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv)
+
+    def _fit(s, c):  # largest chunk <= c that divides s (1500 -> 750, ...)
+        c = min(c, s)
+        while s % c:
+            c -= 1
+        return c
+    q_chunk = _fit(sq, q_chunk)
+    kv_chunk = _fit(skv, kv_chunk)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+
+    qg = _split_heads(q, hkv)                       # (B,Hkv,G,Sq,D)
+    g = qg.shape[2]
+    scale = d ** -0.5
+    qg = (qg.astype(jnp.float32) * scale).astype(q.dtype)
+
+    # chunk layouts
+    qg = qg.reshape(b, hkv, g, nq, q_chunk, d)
+    qpos = q_positions.reshape(nq, q_chunk)
+    kc = k.reshape(b, hkv, nk, kv_chunk, d)
+    vc = v.reshape(b, hkv, nk, kv_chunk, d)
+    kpos = kv_positions.reshape(nk, kv_chunk)
+
+    def one_q_chunk(args):
+        qi, qp = args                               # (B,Hkv,G,qc,D), (qc,)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            ki, vi, kp = kv
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ki,
+                           preferred_element_type=jnp.float32)
+            s = _softcap(s, softcap)
+            s = s + _mask_bias(qp, kp, causal, window)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vi.dtype), vi,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kc, 2, 0), jnp.moveaxis(vc, 2, 0), kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.astype(q.dtype)                  # (B,Hkv,G,qc,D)
+
+    outs = jax.lax.map(one_q_chunk, (jnp.moveaxis(qg, 3, 0), qpos))
+    # (nq,B,Hkv,G,qc,D) -> (B,Hq,Sq,D)
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, sq, d)
+    return out.reshape(b, hq, sq, d)
+
+
+def decode_attention(q, k, v, kv_positions, cache_len, *, window=0, softcap=0.0):
+    """Single-position attention against a (possibly partial/ring) KV cache.
+
+    q: (B, Hq, D); k, v: (B, Hkv, S, D); kv_positions: (S,) global position of
+    each cache slot (-1 = never written); cache_len: scalar int (= current
+    position + 1). Returns (out (B,Hq,D), m (B,Hq), l (B,Hq)) — partial-softmax
+    stats so callers can combine across split-KV shards.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    qg = q.reshape(b, hkv, hq // hkv, d)
+    scale = d ** -0.5
+    s_ = jnp.einsum("bhgd,bhkd->bhgk", (qg.astype(jnp.float32) * scale).astype(q.dtype),
+                    k, preferred_element_type=jnp.float32)
+    s_ = _softcap(s_, softcap)
+    kv_pos = kv_positions
+    ok = (kv_pos[None, None, None, :] < cache_len) & (kv_pos >= 0)[None, None, None, :]
+    if window and window > 0:
+        ok &= kv_pos[None, None, None, :] > cache_len - 1 - window
+    s_ = jnp.where(ok, s_, NEG_INF)
+    m = jnp.max(s_, axis=-1)
+    p = jnp.exp(s_ - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return (out.reshape(b, hq, d), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def combine_partial(out, m, l, axis_name):
+    """Combine split-KV partial attention (out = unnormalized p@v, m, l) across
+    ``axis_name`` with a numerically-stable softmax merge. Only (o, m, l)
+    crosses the link — never the KV cache itself."""
+    m_g = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_g)
+    out = jax.lax.psum(out * w[..., None], axis_name)
+    l = jax.lax.psum(l * w, axis_name)
+    return out / jnp.maximum(l, 1e-30)[..., None]
+
+
+def finalize_partial(out, m, l):
+    """Single-shard finalize (no combine)."""
+    del m
+    return out / jnp.maximum(l, 1e-30)[..., None]

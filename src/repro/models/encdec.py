@@ -1,0 +1,178 @@
+"""Whisper-style encoder-decoder backbone. The conv audio frontend is a STUB:
+``input_specs()`` supplies precomputed frame embeddings (B, S_enc, d_model),
+per the assignment sheet. Positions are sinusoidal (frontend-stub convention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_lib
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of, embed_tokens,
+                                 init_embedding, init_lm_head, init_mlp,
+                                 init_norm, lm_logits, sinusoidal_positions)
+from repro.models.transformer import init_attn_weights, _project_qkv
+from repro.models.decode import _ring_positions
+from repro.parallel import sharding as shd
+
+
+def _mha(p, cfg, xq, xkv, causal):
+    """Full attention between xq (B,Sq,d) and xkv (B,Skv,d)."""
+    b, sq, _ = xq.shape
+    skv = xkv.shape[1]
+    q = (xq @ p["wq"]).reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    k = (xkv @ p["wk"]).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    v = (xkv @ p["wv"]).reshape(b, skv, cfg.num_kv_heads, cfg.head_dim)
+    q, k, v = (t.transpose(0, 2, 1, 3) for t in (q, k, v))
+    o = attn_lib.chunked_attention(q, k, v, causal=causal,
+                                   q_positions=jnp.arange(sq),
+                                   kv_positions=jnp.arange(skv))
+    o = o.transpose(0, 2, 1, 3).reshape(b, sq, cfg.q_dim)
+    return o @ p["wo"]
+
+
+def init_enc_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_norm(cfg, cfg.d_model),
+            "attn": init_attn_weights(k1, cfg, cfg.d_model),
+            "ln2": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(k2, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def init_dec_layer(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg, cfg.d_model),
+            "attn": init_attn_weights(k1, cfg, cfg.d_model),
+            "ln_x": init_norm(cfg, cfg.d_model),
+            "xattn": init_attn_weights(k2, cfg, cfg.d_model),
+            "ln2": init_norm(cfg, cfg.d_model),
+            "mlp": init_mlp(k3, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ke, kh, kl, kd = jax.random.split(key, 4)
+    return {
+        "embed": init_embedding(ke, cfg),
+        "head": init_lm_head(kh, cfg),
+        "enc_layers": [init_enc_layer(k, cfg)
+                       for k in jax.random.split(kl, cfg.encoder_layers)],
+        "dec_layers": [init_dec_layer(k, cfg)
+                       for k in jax.random.split(kd, cfg.num_layers)],
+        "enc_norm": init_norm(cfg, cfg.d_model),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d) precomputed embeddings -> memory (B, S_enc, d)."""
+    x = frames.astype(dtype_of(cfg))
+    x = (x.astype(jnp.float32)
+         + sinusoidal_positions(x.shape[1], x.shape[2])).astype(x.dtype)
+    x = shd.constrain(x, ("batch", None, None))
+    for p in params["enc_layers"]:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + _mha(p["attn"], cfg, h, h, causal=False)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], cfg, h)
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def forward(params, cfg: ModelConfig, frames, tokens, *, mesh=None):
+    """Teacher-forced decoder over full token sequence. -> (logits, aux=0)."""
+    mem = encode(params, cfg, frames)
+    x = embed_tokens(params["embed"], tokens)
+    x = (x.astype(jnp.float32)
+         + sinusoidal_positions(x.shape[1], x.shape[2])).astype(x.dtype)
+    x = shd.constrain(x, ("batch", None, None))
+    for p in params["dec_layers"]:
+        h = apply_norm(cfg, p["ln1"], x)
+        x = x + _mha(p["attn"], cfg, h, h, causal=True)
+        h = apply_norm(cfg, p["ln_x"], x)
+        x = x + _mha(p["xattn"], cfg, h, mem, causal=False)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], cfg, h)
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(params["head"], params["embed"], cfg, x), jnp.zeros(())
+
+
+# ---------------------------------------------------------------- serving
+def init_decode_state(params_or_none, cfg: ModelConfig, batch: int,
+                      max_seq: int):
+    dt = dtype_of(cfg)
+    kv = (batch, cfg.num_kv_heads, max_seq, cfg.head_dim)
+    xkv = (batch, cfg.num_kv_heads, cfg.encoder_seq, cfg.head_dim)
+    layers = [{"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+               "xk": jnp.zeros(xkv, dt), "xv": jnp.zeros(xkv, dt)}
+              for _ in range(cfg.num_layers)]
+    return {"pos": jnp.zeros((), jnp.int32), "layers": layers}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, *, mesh=None,
+            pad_cache_to=0):
+    """Encode audio + run decoder over the prompt, building all caches."""
+    mem = encode(params, cfg, frames)
+    b, s = tokens.shape
+    smax = max(pad_cache_to, s)
+    x = embed_tokens(params["embed"], tokens)
+    x = (x.astype(jnp.float32) + sinusoidal_positions(s, x.shape[2])
+         ).astype(x.dtype)
+    layers = []
+    for p in params["dec_layers"]:
+        h = apply_norm(cfg, p["ln1"], x)
+        k = (h @ p["attn"]["wk"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim
+                                          ).transpose(0, 2, 1, 3)
+        v = (h @ p["attn"]["wv"]).reshape(b, s, cfg.num_kv_heads, cfg.head_dim
+                                          ).transpose(0, 2, 1, 3)
+        x = x + _mha(p["attn"], cfg, h, h, causal=True)
+        h = apply_norm(cfg, p["ln_x"], x)
+        xk = (mem @ p["xattn"]["wk"]).reshape(b, -1, cfg.num_kv_heads,
+                                              cfg.head_dim).transpose(0, 2, 1, 3)
+        xv = (mem @ p["xattn"]["wv"]).reshape(b, -1, cfg.num_kv_heads,
+                                              cfg.head_dim).transpose(0, 2, 1, 3)
+        x = x + _mha(p["xattn"], cfg, h, mem, causal=False)
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], cfg, h)
+        pad = ((0, 0), (0, 0), (0, smax - s), (0, 0))
+        layers.append({"k": jnp.pad(k, pad), "v": jnp.pad(v, pad),
+                       "xk": xk, "xv": xv})
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
+    logits = lm_logits(params["head"], params["embed"], cfg, x)[:, 0, :]
+    return logits, {"pos": jnp.asarray(s, jnp.int32), "layers": layers}
+
+
+def decode_step(params, cfg: ModelConfig, state, tokens, *, mesh=None):
+    pos = state["pos"]
+    b = tokens.shape[0]
+    x = embed_tokens(params["embed"], tokens)
+    d = x.shape[-1]
+    # position embedding at `pos` via dynamic slice of a static table
+    table = sinusoidal_positions(state["layers"][0]["k"].shape[2], d)
+    pe = jax.lax.dynamic_slice_in_dim(table, pos, 1, 0)[0]
+    x = (x.astype(jnp.float32) + pe).astype(x.dtype)
+    new_layers = []
+    for p, lstate in zip(params["dec_layers"], state["layers"]):
+        h = apply_norm(cfg, p["ln1"], x[:, None, :])
+        q, k, v = _project_qkv(p["attn"], cfg, h, pos[None])
+        q = q[:, :, 0, :]
+        nk = jax.lax.dynamic_update_slice(lstate["k"], k, (0, 0, pos, 0))
+        nv = jax.lax.dynamic_update_slice(lstate["v"], v, (0, 0, pos, 0))
+        kv_pos = jnp.arange(nk.shape[2])
+        o, m, l = attn_lib.decode_attention(q, nk, nv, kv_pos, pos + 1)
+        o = attn_lib.finalize_partial(o, m, l)
+        x = x + (o.reshape(b, cfg.q_dim).astype(x.dtype) @ p["attn"]["wo"])
+        # cross attention against fixed encoder K/V
+        h = apply_norm(cfg, p["ln_x"], x[:, None, :])
+        qx = (h @ p["xattn"]["wq"]).reshape(b, cfg.num_heads, cfg.head_dim)
+        ox, mx, lx = attn_lib.decode_attention(
+            qx, lstate["xk"], lstate["xv"], jnp.arange(lstate["xk"].shape[2]),
+            jnp.asarray(lstate["xk"].shape[2], jnp.int32))
+        ox = attn_lib.finalize_partial(ox, mx, lx)
+        x = x + (ox.reshape(b, cfg.q_dim).astype(x.dtype) @ p["xattn"]["wo"])
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + apply_mlp(p["mlp"], cfg, h)
+        new_layers.append({"k": nk, "v": nv, "xk": lstate["xk"],
+                           "xv": lstate["xv"]})
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(params["head"], params["embed"], cfg, x)
+    return logits, {"pos": pos + 1, "layers": new_layers}

@@ -1,0 +1,136 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Params are plain dicts of jnp arrays; every init_* has a matching apply_*.
+Weights are stored in cfg.dtype (bf16 by default); norms/logits accumulate f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- norms
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def apply_rmsnorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_layernorm(p, x, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, d: int):
+    # whisper/starcoder2-style models use LayerNorm; the rest RMSNorm
+    if cfg.family == "audio" or not cfg.mlp_gated and cfg.family == "dense" \
+            and cfg.name.startswith("starcoder2"):
+        return init_layernorm(d)
+    return init_rmsnorm(d)
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if "bias" in p:
+        return apply_layernorm(p, x, cfg.norm_eps)
+    return apply_rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, rotary_pct: float, theta: float):
+    rot = int(head_dim * rotary_pct) // 2 * 2
+    if rot == 0:
+        return None
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv)  # (rot/2,)
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: (..., S, head_dim); positions: (..., S) int32. Half-split convention,
+    applied to the first rotary_pct of head_dim (chatglm3: 0.5)."""
+    inv = rope_freqs(x.shape[-1], cfg.rotary_pct, cfg.rope_theta)
+    if inv is None:
+        return x
+    rot = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1.astype(x.dtype), y2.astype(x.dtype), xp], axis=-1)
+
+
+def sinusoidal_positions(seq: int, d: int, offset=0):
+    """Whisper-style fixed sinusoidal embeddings (frontend stub uses these too)."""
+    pos = np.arange(seq)[:, None] + 0
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# ---------------------------------------------------------------- MLP
+def init_mlp(key, cfg: ModelConfig, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = d_ff ** -0.5
+    dt = dtype_of(cfg)
+    p = {"w_up": (jax.random.normal(k1, (d, d_ff)) * s_in).astype(dt),
+         "w_down": (jax.random.normal(k2, (d_ff, d)) * s_out).astype(dt)}
+    if cfg.mlp_gated:
+        p["w_gate"] = (jax.random.normal(k3, (d, d_ff)) * s_in).astype(dt)
+    return p
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    up = x @ p["w_up"]
+    if cfg.mlp_gated:
+        h = jax.nn.silu(x @ p["w_gate"]) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------- embeddings
+def init_embedding(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    emb = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dt)
+    return {"table": emb}
+
+
+def embed_tokens(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def init_lm_head(key, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return {}
+    dt = dtype_of(cfg)
+    w = (jax.random.normal(key, (cfg.d_model, cfg.vocab_size))
+         * cfg.d_model ** -0.5).astype(dt)
+    return {"w": w}
+
+
+def lm_logits(head_p, embed_p, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return x @ embed_p["table"].T
+    return x @ head_p["w"]

@@ -1,0 +1,197 @@
+"""xLSTM blocks: mLSTM (matrix memory, exponential gating) and sLSTM (scalar
+memory, block-diagonal recurrence). Faithful recurrent forms via lax.scan;
+decode carries O(1) state => xlstm runs the long_500k shape.
+
+State layout (per block):
+  mlstm: C (B,H,hd,hd), n (B,H,hd), m (B,H)
+  slstm: h,c,n (B,H,hd), m (B,H)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dtype_of, init_rmsnorm, apply_rmsnorm
+
+
+def _lin(key, shape, scale, dt):
+    return (jax.random.normal(key, shape) * scale).astype(dt)
+
+
+# =============================================================== mLSTM
+def init_mlstm(key, cfg: ModelConfig, d: int):
+    h = cfg.num_heads
+    hd = cfg.head_dim
+    inner = h * hd
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    s = d ** -0.5
+    si = inner ** -0.5
+    return {
+        "norm": init_rmsnorm(d),
+        "w_up": _lin(ks[0], (d, 2 * inner), s, dt),       # -> x_m, z(gate)
+        "w_q": _lin(ks[1], (inner, inner), si, dt),
+        "w_k": _lin(ks[2], (inner, inner), si, dt),
+        "w_v": _lin(ks[3], (inner, inner), si, dt),
+        "w_if": _lin(ks[4], (inner, 2 * h), si, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]),
+        "w_down": _lin(ks[5], (inner, d), si, dt),
+        "out_norm": init_rmsnorm(inner),
+    }
+
+
+def _mlstm_gates(p, xm, h):
+    gf = xm.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_log, f_log = gf[..., :h], gf[..., h:]
+    log_f = -jax.nn.softplus(-f_log)      # log sigmoid(f)
+    return i_log, log_f
+
+
+def mlstm_scan(p, cfg: ModelConfig, x):
+    """x: (B,S,d) -> (B,S,d). Recurrent form, scan over time."""
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    inner = h * hd
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = up[..., :inner], up[..., inner:]
+    q = (xm @ p["w_q"]).reshape(b, s, h, hd)
+    k = (xm @ p["w_k"]).reshape(b, s, h, hd) * hd ** -0.5
+    v = (xm @ p["w_v"]).reshape(b, s, h, hd)
+    i_log, log_f = _mlstm_gates(p, xm, h)                 # (B,S,H)
+
+    def step(carry, t):
+        c_st, n_st, m_st = carry
+        qt, kt, vt, it, ft = t
+        m_new = jnp.maximum(ft + m_st, it)
+        fs = jnp.exp(ft + m_st - m_new)[..., None]
+        is_ = jnp.exp(it - m_new)[..., None]
+        c_new = fs[..., None] * c_st + is_[..., None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n_new = fs * n_st + is_ * kt
+        denom = jnp.maximum(jnp.abs(jnp.sum(n_new * qt, -1)),
+                            jnp.exp(-m_new))[..., None]
+        ht = jnp.einsum("bhd,bhde->bhe", qt, c_new) / denom
+        return (c_new, n_new, m_new), ht.astype(x.dtype)
+
+    c0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.zeros((b, h), jnp.float32)
+    xs = (jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(i_log, 1, 0), jnp.moveaxis(log_f, 1, 0))
+    _, hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, inner)       # (B,S,H*hd)
+    hs = apply_rmsnorm(p["out_norm"], hs, cfg.norm_eps)
+    out = (hs * jax.nn.silu(z)) @ p["w_down"]
+    return x + out
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    h, hd = cfg.num_heads, cfg.head_dim
+    return {"C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_step(p, cfg: ModelConfig, x_t, state):
+    """x_t: (B,d) single token. Returns (y (B,d), new state)."""
+    b, d = x_t.shape
+    h, hd = cfg.num_heads, cfg.head_dim
+    inner = h * hd
+    xn = apply_rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = up[..., :inner], up[..., inner:]
+    q = (xm @ p["w_q"]).reshape(b, h, hd).astype(jnp.float32)
+    k = ((xm @ p["w_k"]).reshape(b, h, hd) * hd ** -0.5).astype(jnp.float32)
+    v = (xm @ p["w_v"]).reshape(b, h, hd).astype(jnp.float32)
+    it, ft = _mlstm_gates(p, xm, h)
+    m_new = jnp.maximum(ft + state["m"], it)
+    fs = jnp.exp(ft + state["m"] - m_new)[..., None]
+    is_ = jnp.exp(it - m_new)[..., None]
+    c_new = fs[..., None] * state["C"] + is_[..., None] * (
+        k[..., :, None] * v[..., None, :])
+    n_new = fs * state["n"] + is_ * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_new * q, -1)),
+                        jnp.exp(-m_new))[..., None]
+    ht = jnp.einsum("bhd,bhde->bhe", q, c_new) / denom
+    hs = apply_rmsnorm(p["out_norm"], ht.reshape(b, inner).astype(x_t.dtype),
+                       cfg.norm_eps)
+    y = (hs * jax.nn.silu(z)) @ p["w_down"]
+    return x_t + y, {"C": c_new, "n": n_new, "m": m_new}
+
+
+# =============================================================== sLSTM
+def init_slstm(key, cfg: ModelConfig, d: int):
+    h = cfg.sslstm_heads
+    hd = d // h
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    return {
+        "norm": init_rmsnorm(d),
+        "w_x": _lin(ks[0], (d, 4 * d), d ** -0.5, jnp.float32),  # i,f,z,o
+        "r_h": _lin(ks[1], (h, hd, 4 * hd), hd ** -0.5, jnp.float32),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_down": _lin(ks[2], (d, d), d ** -0.5, dt),
+        "out_norm": init_rmsnorm(d),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, carry):
+    """wx_t: (B, 4d) precomputed input proj; carry: dict of (B,H,hd)."""
+    h_heads = cfg.sslstm_heads
+    hprev = carry["h"]
+    b = hprev.shape[0]
+    hd = hprev.shape[-1]
+    rec = jnp.einsum("bhd,hde->bhe", hprev, p["r_h"])      # (B,H,4hd)
+    gates = wx_t.reshape(b, h_heads, 4 * hd) + rec
+    i_l, f_l, z_l, o_l = jnp.split(gates, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_l)
+    m_new = jnp.maximum(log_f + carry["m"][..., None],
+                        i_l).max(-1)                        # (B,H) shared stabilizer
+    fs = jnp.exp(log_f + carry["m"][..., None] - m_new[..., None])
+    is_ = jnp.exp(i_l - m_new[..., None])
+    c_new = fs * carry["c"] + is_ * jnp.tanh(z_l)
+    n_new = fs * carry["n"] + is_
+    h_new = jax.nn.sigmoid(o_l) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_scan(p, cfg: ModelConfig, x):
+    b, s, d = x.shape
+    h = cfg.sslstm_heads
+    hd = d // h
+    xn = apply_rmsnorm(p["norm"], x, cfg.norm_eps)
+    wx = xn.astype(jnp.float32) @ p["w_x"] + p["b"]        # (B,S,4d)
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, cfg, wx_t, carry)
+        return new, new["h"]
+
+    carry0 = slstm_init_state_inner(cfg, b, hd)
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    hs = apply_rmsnorm(p["out_norm"], hs, cfg.norm_eps)
+    return x + hs @ p["w_down"]
+
+
+def slstm_init_state_inner(cfg, batch, hd):
+    h = cfg.sslstm_heads
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, d: int):
+    return slstm_init_state_inner(cfg, batch, d // cfg.sslstm_heads)
+
+
+def slstm_step(p, cfg: ModelConfig, x_t, state):
+    b, d = x_t.shape
+    xn = apply_rmsnorm(p["norm"], x_t, cfg.norm_eps)
+    wx = xn.astype(jnp.float32) @ p["w_x"] + p["b"]
+    new = _slstm_cell(p, cfg, wx, state)
+    hs = new["h"].reshape(b, d).astype(x_t.dtype)
+    hs = apply_rmsnorm(p["out_norm"], hs, cfg.norm_eps)
+    return x_t + hs @ p["w_down"], new

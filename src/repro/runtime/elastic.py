@@ -1,0 +1,59 @@
+"""Elastic re-meshing: resume a run on a different device count.
+
+Checkpoints store full logical arrays (checkpoint/manager.py), so elasticity
+is purely a sharding concern: build the new mesh from surviving devices,
+recompute the sharding rules (they depend only on mesh axis sizes), and
+device_put each restored array with its new sharding. Batch sizes stay global
+(the data pipeline reshards rows by (seed, step, row) identity, so the token
+stream is unchanged).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import latest_step, restore
+from repro.parallel import sharding as shd
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int = 0):
+    """Factor n_devices into (data, model); model defaults to the largest
+    power of two <= sqrt(n)."""
+    if model_parallel <= 0:
+        model_parallel = 1
+        while model_parallel * 2 <= int(math.sqrt(n_devices)) and \
+                n_devices % (model_parallel * 2) == 0:
+            model_parallel *= 2
+    assert n_devices % model_parallel == 0
+    return (n_devices // model_parallel, model_parallel)
+
+
+def make_elastic_mesh(devices=None, model_parallel: int = 0) -> Mesh:
+    devs = jax.devices() if devices is None else devices
+    da, mo = best_mesh_shape(len(devs), model_parallel)
+    return Mesh(np.array(devs).reshape(da, mo), ("data", "model"))
+
+
+def remesh_restore(ckpt_dir: str, target_tree, new_mesh: Mesh):
+    """Load latest checkpoint and reshard every leaf onto ``new_mesh``."""
+    step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    shardings = {
+        "params": shd.make_param_shardings(
+            jax.eval_shape(lambda t: t, target_tree["params"]), new_mesh),
+        "opt": {
+            "m": shd.make_param_shardings(
+                jax.eval_shape(lambda t: t, target_tree["opt"]["m"]),
+                new_mesh, opt_state=True),
+            "v": shd.make_param_shardings(
+                jax.eval_shape(lambda t: t, target_tree["opt"]["v"]),
+                new_mesh, opt_state=True),
+            "step": shd.replicated(new_mesh),
+        },
+    }
+    tree, manifest = restore(ckpt_dir, step, target_tree, shardings)
+    return step, tree, shardings

@@ -1,0 +1,117 @@
+"""Fault-tolerant training runner.
+
+Mechanisms (each individually tested in tests/test_runtime.py):
+  * periodic async checkpoints (atomic, keep-k) + resume-from-latest;
+  * NaN/Inf-loss rollback: restore last checkpoint, skip the poisoned data
+    window, continue (loss-spike protection);
+  * simulated preemption (SIGTERM-style flag) -> final checkpoint + clean exit;
+  * heartbeat file per step — an external watchdog restarts dead jobs;
+  * elastic restart: ``elastic.remesh_restore`` reshards the latest checkpoint
+    onto whatever devices survive (see runtime/elastic.py).
+
+Straggler mitigation at this layer (single-controller JAX is bulk-synchronous;
+per-step straggler *exclusion* is impossible without re-meshing): bounded data
+prefetch + skip-batch on pipeline underrun, and the elastic path doubles as
+slow-node ejection — documented in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import AsyncCheckpointer
+
+
+@dataclasses.dataclass
+class RunnerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    max_rollbacks: int = 3
+    heartbeat_path: Optional[str] = None
+
+
+class TrainingRunner:
+    """Wraps a jitted step function with checkpoint/restart + NaN rollback."""
+
+    def __init__(self, cfg: RunnerConfig, step_fn: Callable,
+                 params, opt_state, data_iter, shardings=None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.data = data_iter
+        self.shardings = shardings
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.step = 0
+        self.rollbacks = 0
+        self.preempted = False
+        self.history = []
+
+    # ---- lifecycle -------------------------------------------------------
+    def try_resume(self):
+        tree = {"params": self.params, "opt": self.opt_state}
+        step, restored, manifest = self.ckpt.restore_latest(
+            tree, self.shardings)
+        if step is not None:
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step = int(manifest["metadata"].get("next_step", step))
+            return True
+        return False
+
+    def _checkpoint(self):
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       metadata={"next_step": self.step})
+
+    def _heartbeat(self):
+        if self.cfg.heartbeat_path:
+            with open(self.cfg.heartbeat_path, "w") as f:
+                json.dump({"step": self.step, "t": time.time()}, f)
+
+    def preempt(self):
+        """External preemption signal (SIGTERM handler calls this)."""
+        self.preempted = True
+
+    # ---- main loop -------------------------------------------------------
+    def run(self, num_steps: int, poison_hook: Optional[Callable] = None):
+        """poison_hook(step, batch) -> batch lets tests inject NaNs."""
+        end = self.step + num_steps
+        while self.step < end:
+            if self.preempted:
+                self._checkpoint()
+                self.ckpt.wait()
+                return "preempted"
+            batch = next(self.data)
+            if poison_hook is not None:
+                batch = poison_hook(self.step, batch)
+            params, opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(jax.device_get(metrics["loss"]))
+            if not np.isfinite(loss):
+                # rollback: restore last good state; the poisoned batch is
+                # consumed (skipped), so training continues past it
+                self.rollbacks += 1
+                if self.rollbacks > self.cfg.max_rollbacks:
+                    raise RuntimeError("too many NaN rollbacks")
+                self.ckpt.wait()
+                if not self.try_resume():
+                    raise RuntimeError("NaN before first checkpoint")
+                continue
+            self.params, self.opt_state = params, opt_state
+            self.step += 1
+            self.history.append(loss)
+            self._heartbeat()
+            if self.step % self.cfg.ckpt_every == 0:
+                self._checkpoint()
+        self._checkpoint()
+        self.ckpt.wait()
+        return "done"

@@ -1,0 +1,31 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device tests spawn subprocesses (tests/test_multidevice.py).
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def make_batch(cfg, batch=2, seq=16, seed=1):
+    """Family-correct random batch for a smoke config."""
+    import jax
+    import jax.numpy as jnp
+    key = jax.random.key(seed)
+    out = {"tokens": jax.random.randint(key, (batch, seq), 0,
+                                        cfg.vocab_size)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = jax.random.normal(
+            key, (batch, cfg.num_patches, cfg.d_model)).astype(dt)
+    if cfg.family == "audio":
+        out["frames"] = jax.random.normal(
+            key, (batch, cfg.encoder_seq, cfg.d_model)).astype(dt)
+    return out
+
+
+@pytest.fixture
+def rng():
+    import jax
+    return jax.random.key(0)

@@ -1,0 +1,104 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward/train
+step on CPU, output shapes + no NaNs; prefill/decode consistency vs the full
+forward (the serving path must agree with the training path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, applicable_shapes
+from repro.models import build_model, input_specs
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = api.loss(params, batch)
+    assert jnp.isfinite(loss), (arch, loss)
+    assert 1.0 < float(loss) < 20.0
+    grads = jax.grad(lambda p: api.loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32))))
+               for g in flat), arch
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0
+               for g in flat), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_match_forward(arch):
+    """logits from (prefill + decode_step) == logits from the full forward."""
+    # ample MoE capacity: capacity buckets quantize with sequence length, so
+    # exact-consistency tests must avoid routing drops
+    cfg = get_smoke_config(arch).replace(dtype="float32", capacity_factor=8.0)
+    api = build_model(cfg)
+    params = api.init(jax.random.key(0))
+    t = 12
+    batch_full = make_batch(cfg, batch=2, seq=t + 1)
+    tokens = batch_full["tokens"]
+
+    if cfg.family == "audio":
+        from repro.models import encdec
+        full_logits, _ = encdec.forward(params, cfg, batch_full["frames"],
+                                        tokens)
+    else:
+        from repro.models import transformer
+        extra = batch_full.get("patch_embeds")
+        full_logits, _ = transformer.forward(params, cfg, tokens,
+                                             extra_embeds=extra)
+    n_extra = 0 if cfg.family != "vlm" else cfg.num_patches
+
+    batch_prompt = dict(batch_full)
+    batch_prompt["tokens"] = tokens[:, :t]
+    # vlm caches cover the patch positions too
+    p_logits, state = api.prefill(params, batch_prompt,
+                                  pad_cache_to=n_extra + t + 4)
+    np.testing.assert_allclose(
+        np.asarray(p_logits, np.float32),
+        np.asarray(full_logits[:, n_extra + t - 1], np.float32),
+        rtol=2e-3, atol=2e-3, err_msg=f"{arch}: prefill != forward")
+
+    d_logits, state = api.decode_step(params, state, tokens[:, t])
+    np.testing.assert_allclose(
+        np.asarray(d_logits, np.float32),
+        np.asarray(full_logits[:, n_extra + t], np.float32),
+        rtol=2e-3, atol=2e-3, err_msg=f"{arch}: decode != forward")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_count_and_specs(arch):
+    """Full configs: analytic param counts are plausible and input_specs are
+    well-formed for every applicable shape (no allocation)."""
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    assert n > 50e6, (arch, n)
+    assert cfg.active_param_count() <= n
+    for shape in applicable_shapes(cfg):
+        specs = input_specs(cfg, shape)
+        assert "tokens" in specs
+        for v in specs.values():
+            assert all(d > 0 for d in v.shape)
+
+
+def test_param_count_sanity_known_archs():
+    assert 6.5e9 < get_config("qwen2-7b").param_count() < 8.5e9
+    assert 13e9 < get_config("qwen3-14b").param_count() < 16e9
+    assert 13e9 < get_config("starcoder2-15b").param_count() < 17e9
+    arctic = get_config("arctic-480b")
+    assert 4.3e11 < arctic.param_count() < 5.4e11
+    assert arctic.active_param_count() < 3.5e10
+    moon = get_config("moonshot-v1-16b-a3b")
+    assert moon.active_param_count() < 0.35 * moon.param_count()
+    assert 0.9e8 < get_config("xlstm-125m").param_count() < 3e8
+
+
+def test_long_context_rules():
+    from repro.configs.base import supports_long_context
+    assert supports_long_context(get_config("xlstm-125m"))
+    assert supports_long_context(get_config("recurrentgemma-2b"))
+    for a in ("qwen2-7b", "arctic-480b", "llava-next-34b", "whisper-base"):
+        assert not supports_long_context(get_config(a)), a
