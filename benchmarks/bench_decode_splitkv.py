@@ -5,6 +5,7 @@ import jax.numpy as jnp
 
 from benchmarks._util import emit, time_fn
 from repro.launch import roofline as rl
+from repro.compat import make_mesh
 
 
 def main():
@@ -12,8 +13,7 @@ def main():
     from repro.models import build_model, decode_state_specs
     from repro.parallel import sharding as shd
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((1, ndev), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, ndev), ("data", "model"))
     for mode in ("local", "split_kv"):
         cfg = get_smoke_config("qwen2-7b").replace(num_kv_heads=4)
         cfg = cfg.replace(parallel=cfg.parallel.replace(decode_attention=mode))

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 from benchmarks._util import emit, time_fn
 from repro.launch import roofline as rl
+from repro.compat import make_mesh
 
 
 def main():
@@ -16,8 +17,7 @@ def main():
     from repro.parallel import sharding as shd
     ndev = len(jax.devices())
     da = max(ndev // 4, 1)
-    mesh = jax.make_mesh((da, ndev // da), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((da, ndev // da), ("data", "model"))
     cfg0 = get_smoke_config("moonshot-v1-16b-a3b").replace(scan_layers=True)
     params = build_model(cfg0).init(jax.random.key(0))
     batch = {"tokens": jax.random.randint(jax.random.key(1), (8, 128),

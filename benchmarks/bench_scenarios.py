@@ -1,0 +1,96 @@
+"""Scenario subsystem benchmark: the three library experiments at
+SMOKE_CONFIG scale — wall time per chunk, per-region synapse counts, the
+lesion loss/regrowth signature, and the paper's bit-identity invariant
+(old vs new connectivity) under the focal_stimulation protocol.
+
+  PYTHONPATH=src:. python -m benchmarks.bench_scenarios
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks._util import emit
+
+
+def _run(scn, cfg, num_chunks):
+    import jax
+    from repro.core import engine
+    from repro.scenarios import library, observables, protocol
+    mesh = engine.make_brain_mesh()
+    init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scn)
+    st = init_fn()
+    st = chunk(st)  # compile + first round
+    jax.block_until_ready(st.positions)
+    rec = observables.init_recorder(num_chunks, len(scn.regions) + 1)
+    t0 = time.perf_counter()
+    for i in range(num_chunks):
+        st = chunk(st)
+        alive = protocol.alive_mask(scn.events, scn.regions, st.positions,
+                                    (i + 2) * cfg.rate_period) \
+            if scn.events else None
+        rec = observables.record(rec, st.positions, st.neurons.calcium,
+                                 st.neurons.rate, st.out_edges, scn.regions,
+                                 alive)
+    jax.block_until_ready(st.positions)
+    dt = (time.perf_counter() - t0) / num_chunks
+    return dt, st, observables.flush(rec)
+
+
+def main():
+    from repro.scenarios import library
+
+    cfg = library.SMOKE_SCENARIO_CONFIG
+    chunks = 12
+    for name in ("baseline_growth", "focal_stimulation", "lesion_rewiring"):
+        scn = library.get_scenario(name)
+        lesion_chunk = 6   # recorder row i holds chunk i+1 (warmup chunk 0)
+        if name == "lesion_rewiring":
+            # lesion mid-bench so both phases land inside `chunks` rounds
+            scn = dataclasses.replace(scn, events=(library.Lesion(
+                "core", t=lesion_chunk * cfg.rate_period),))
+        dt, st, hist = _run(scn, cfg, chunks)
+        syn = hist["synapses"]          # (chunks, nb) by source region
+        per_region = "|".join(f"{v:.0f}" for v in syn[-1])
+        emit(f"scenario_{name}", dt * 1e6,
+             f"synapses_by_region={per_region}")
+
+        if name == "lesion_rewiring":
+            # region 0 = lesioned core, region 1 = rest. Recorder row i holds
+            # chunk i+1; the lesion applies in chunk `lesion_chunk - 1`'s
+            # connectivity update (row lesion_chunk - 2). Loss: the core's
+            # synapses vanish there. Regrowth: the rest region grows past its
+            # first post-lesion count.
+            pre, post = syn[lesion_chunk - 3], syn[lesion_chunk - 2]
+            after = syn[-1]
+            lost = pre[0] > 0 and post[0] == 0 and after[0] == 0
+            regrown = after[1] > post[1]
+            emit("scenario_lesion_loss", 0,
+                 f"core {pre[0]:.0f}->{post[0]:.0f} ok={lost}")
+            emit("scenario_lesion_regrowth", 0,
+                 f"rest {post[1]:.0f}->{after[1]:.0f} ok={regrown}")
+
+    # --- bit-identity: old vs new connectivity under focal_stimulation ----
+    from repro.core import engine
+    scn = library.get_scenario("focal_stimulation")
+    edge_tables = {}
+    for alg in ("old", "new"):
+        c = dataclasses.replace(cfg, connectivity_alg=alg, spike_alg="old")
+        init_fn, chunk = engine.build_sim(c, engine.make_brain_mesh(),
+                                          scenario=scn)
+        st = init_fn()
+        for _ in range(6):
+            st = chunk(st)
+        edge_tables[alg] = (np.sort(np.asarray(st.out_edges), 1),
+                            np.sort(np.asarray(st.in_edges), 1))
+    identical = all(np.array_equal(edge_tables["old"][i],
+                                   edge_tables["new"][i]) for i in (0, 1))
+    emit("scenario_old_new_bit_identical", 0, f"ok={identical}")
+    if not identical:
+        raise SystemExit("old/new connectivity diverged under stimulation")
+
+
+if __name__ == "__main__":
+    main()

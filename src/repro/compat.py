@@ -1,0 +1,91 @@
+"""Version compatibility for the installed jax.
+
+The repo targets the modern ``jax.shard_map`` API surface; the container
+ships jax 0.4.37 where
+
+  * ``shard_map`` lives in ``jax.experimental.shard_map`` and spells the
+    replication check ``check_rep`` instead of ``check_vma``;
+  * ``jax.sharding.AxisType`` does not exist (all mesh axes are Auto);
+  * ``jax.make_mesh`` takes no ``axis_types`` keyword.
+
+Every call site imports these three names from here instead of from jax so
+the same code runs on both API generations.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: axis types not modeled; Auto is the default
+    import enum
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None):
+        # old API: manual axes are (mesh axes - auto); axis_names is the
+        # modern complement (the axes that ARE manual)
+        auto = frozenset() if axis_names is None else \
+            frozenset(mesh.axis_names) - frozenset(axis_names)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma,
+                          auto=auto)
+
+
+# Old XLA's SPMD partitioner check-fails on sharding constraints over the
+# auto axes inside a partially-manual shard_map ("IsManualSubgroup");
+# best-effort constraints must be dropped there on the 0.4.x toolchain.
+PARTIAL_MANUAL_CONSTRAINT_OK = hasattr(jax, "shard_map")
+
+
+def axis_size(axis_name):
+    """jax.lax.axis_size fallback (psum of a unit is the classic idiom —
+    static, so it stays a Python int)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def manual_axes() -> frozenset:
+    """Mesh axes under manual (shard_map) control at the current trace point.
+    Modern jax records them on the abstract mesh; 0.4.x shard_map extends
+    the named-axis environment instead."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names:
+            return frozenset(a for a, t in zip(am.axis_names, am.axis_types)
+                             if t == AxisType.Manual)
+        return frozenset()
+    except AttributeError:
+        pass
+    try:
+        from jax._src.core import get_axis_env
+        return frozenset(get_axis_env().axis_sizes)
+    except Exception:
+        return frozenset()
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """jax.make_mesh that tolerates the missing ``axis_types`` kwarg."""
+    try:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             axis_types=axis_types, devices=devices)
+    except TypeError:
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                             devices=devices)

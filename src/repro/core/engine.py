@@ -24,11 +24,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.configs.msp_brain import BrainConfig
 from repro.core import connectivity as conn
 from repro.core import morton, octree, spikes
-from repro.core.neuron import (NeuronState, init_neurons, refresh_rate,
-                               update_activity, update_elements)
+from repro.core.neuron import (NeuronParams, NeuronState, init_neurons,
+                               refresh_rate, update_activity, update_elements)
+from repro.scenarios import populations as pops
+from repro.scenarios import protocol as proto
+from repro.scenarios import regions as regions_mod
 
 STAT_KEYS = ("spikes_sent", "rates_sent", "bh_requests", "bh_responses",
              "formation_requests", "synapses_formed", "synapses_deleted",
@@ -45,9 +49,9 @@ class BrainState(NamedTuple):
     stats: dict
 
 
-def _sign_of(gid, n, frac):
-    """+1 excitatory / -1 inhibitory, derivable from the gid on any rank."""
-    return jnp.where((gid % n) < int(n * frac), 1.0, -1.0)
+def _neuron_params(table: "pops.PopulationTable") -> NeuronParams:
+    return NeuronParams(table.izh_a, table.izh_b, table.izh_c, table.izh_d,
+                        table.growth_rate, table.target_calcium)
 
 
 def _cap_requests(cfg, num_ranks):
@@ -59,19 +63,32 @@ def _cap_requests(cfg, num_ranks):
     return min(n, max(32, -(-per_dest // 8) * 8))
 
 
-def _cap_deletions(cfg):
-    return max(16, cfg.neurons_per_rank // 4)
+def _cap_deletions(cfg, lesions: bool = False):
+    """Deletion-message buffer capacity. Lesion protocols retract EVERY edge
+    of a dead neuron in one update, so the cap then scales with
+    requests_cap_factor like the formation buffers (n * s_max is the most a
+    rank can ever send to one destination); without lesions the seed's
+    homeostatic trickle keeps the original small buffer (and its collective
+    bytes) unchanged."""
+    n = cfg.neurons_per_rank
+    if not lesions:
+        return max(16, n // 4)
+    return min(n * cfg.max_synapses,
+               max(16, (n // 4) * cfg.requests_cap_factor))
 
 
 # ================================================================ init
-def init_state(cfg: BrainConfig, rank, num_ranks: int) -> BrainState:
+def init_state(cfg: BrainConfig, rank, num_ranks: int,
+               scenario=None) -> BrainState:
     n = cfg.neurons_per_rank
     key = jax.random.fold_in(jax.random.key(cfg.seed), rank)
     kp, kn = jax.random.split(key)
     b = morton.branch_level(num_ranks)
     c_per = morton.cells_per_rank(num_ranks)
     pos = morton.sample_positions_in_cells(kp, rank * c_per, c_per, n, b)
-    neurons = init_neurons(kn, cfg, n)
+    table = pops.table_for(cfg, scenario, n)
+    neurons = init_neurons(kn, cfg, n, params=_neuron_params(table),
+                           is_excitatory=table.is_excitatory)
     syn = conn.init_synapses(n, cfg.max_synapses)
     # (1,)-shaped per-rank counters: sharded over 'ranks', summed at read time
     stats = {k: jnp.zeros((1,), jnp.float32) for k in STAT_KEYS}
@@ -82,14 +99,24 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int) -> BrainState:
 
 # ================================================================ activity
 def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
-                   num_ranks: int):
-    """rate_period electrical steps (scan). Spike exchange per cfg.spike_alg."""
+                   num_ranks: int, scenario=None):
+    """rate_period electrical steps (scan). Spike exchange per cfg.spike_alg.
+    A scenario contributes per-neuron parameters (population table),
+    per-region background drive, stimulation currents, and lesion masks —
+    all trace-stable (the event list is a static Python constant)."""
     n = cfg.neurons_per_rank
     base_key = jax.random.fold_in(jax.random.key(cfg.seed + 1), state.chunk)
-    w_sign = _sign_of(jnp.where(state.in_edges >= 0, state.in_edges, 0),
-                      n, cfg.fraction_excitatory)
+    table = pops.table_for(cfg, scenario, n)
+    nparams = _neuron_params(table)
+    # per-SOURCE-neuron signed weight, derivable on any rank from gid % n
+    # (the population table is replicated by construction)
+    src_lid = jnp.where(state.in_edges >= 0, state.in_edges, 0) % n
     weights = jnp.where(state.in_edges >= 0,
-                        cfg.synapse_weight * w_sign, 0.0)
+                        table.synapse_weight[src_lid], 0.0)
+    regions = scenario.regions if scenario is not None else ()
+    events = scenario.events if scenario is not None else ()
+    bg_mean, bg_std = regions_mod.background_tables(state.positions, regions,
+                                                    cfg)
 
     def step(carry, t):
         st, stats = carry
@@ -107,10 +134,15 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
         local_in = spikes.local_spikes(st.spiked, state.in_edges, rank, n)
         syn_in = jnp.sum((local_in | remote_in) * weights, axis=-1)
         kk = jax.random.fold_in(base_key, 7_000_000 + t)
-        noise = cfg.background_mean + cfg.background_std * \
-            jax.random.normal(kk, (n,))
-        st = update_activity(st, syn_in, noise, cfg)
-        st = update_elements(st, cfg)
+        noise = bg_mean + bg_std * jax.random.normal(kk, (n,))
+        gstep = state.chunk * cfg.rate_period + t
+        if events:
+            noise = noise + proto.stim_drive(events, regions,
+                                             state.positions, gstep)
+        alive = proto.alive_mask(events, regions, state.positions, gstep) \
+            if events else None
+        st = update_activity(st, syn_in, noise, cfg, nparams, alive)
+        st = update_elements(st, cfg, nparams, alive)
         return (st, stats), None
 
     (neurons, stats), _ = jax.lax.scan(
@@ -121,7 +153,7 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
 
 # ================================================================ connectivity
 def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
-                       num_ranks: int):
+                       num_ranks: int, scenario=None):
     n = cfg.neurons_per_rank
     s_max = cfg.max_synapses
     # chunk_key is rank-independent: every rank derives the same stream, so
@@ -132,6 +164,20 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
     gid0 = rank * n
     gids = gid0 + jnp.arange(n, dtype=jnp.int32)
     stats = dict(state.stats)
+
+    # lesion mask at the update instant (the step right after this chunk's
+    # activity scan). Applied BEFORE the algorithm branch so 'old' and 'new'
+    # see identical inputs — the bit-identity invariant holds per protocol.
+    events = scenario.events if scenario is not None else ()
+    alive = proto.alive_mask(events, scenario.regions, state.positions,
+                             (state.chunk + 1) * cfg.rate_period) \
+        if events else None
+    if alive is not None:
+        # dead neurons lose all synaptic elements -> full retraction below,
+        # partners are notified and regain vacant elements
+        state = state._replace(neurons=state.neurons._replace(
+            ax_elements=jnp.where(alive, state.neurons.ax_elements, 0.0),
+            de_elements=jnp.where(alive, state.neurons.de_elements, 0.0)))
 
     # ---- deletion by retraction (phase 3a) -------------------------------
     out_edges, in_edges = state.out_edges, state.in_edges
@@ -152,7 +198,7 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
         flat_mine = jnp.broadcast_to(my_gid_col, kill.shape).reshape(-1)
         valid = flat_other >= 0
         dest = jnp.where(valid, flat_other // n, num_ranks)
-        cap = _cap_deletions(cfg)
+        cap = _cap_deletions(cfg, proto.has_lesions(scenario))
         slot = octree.positions_within(dest, num_ranks + 1)
         ok = valid & (slot < cap)
         buf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
@@ -162,12 +208,16 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                        jnp.where(ok, flat_mine, -1)], -1), mode="drop")
         if num_ranks > 1:
             buf = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=True)
-        return buf.reshape(num_ranks * cap, 2)
+        return buf.reshape(num_ranks * cap, 2), \
+            jnp.sum(valid & ~ok).astype(jnp.float32)
 
     # old edges (pre-retraction) were already overwritten; use kill masks on
     # the pre-retraction tables captured above via state
-    msgs_out = route_deletions(kill_out, state.out_edges, gids[:, None])
-    msgs_in = route_deletions(kill_in, state.in_edges, gids[:, None])
+    msgs_out, ovf_out = route_deletions(kill_out, state.out_edges,
+                                        gids[:, None])
+    msgs_in, ovf_in = route_deletions(kill_in, state.in_edges, gids[:, None])
+    # dropped notifications leave stale partner edges — surface them
+    stats["request_overflow"] = stats["request_overflow"] + ovf_out + ovf_in
     # apply: partner of my out-edge removes its in-edge, and vice versa
     in_edges = conn.remove_edges_by_messages(
         in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1), msgs_out[:, 1],
@@ -188,6 +238,10 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
     top = octree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
 
     searching = vac_a >= 1
+    if alive is not None:
+        # dead neurons neither search for partners nor offer vacancies
+        searching = searching & alive
+        vac_d_pos = jnp.where(alive, vac_d_pos, 0.0)
     # per-searcher stream derived from (chunk_key, gid) — reconstructible on
     # the owning rank in the new algorithm (see _formation_new)
     skeys = jax.vmap(lambda g: jax.random.fold_in(chunk_key, g))(gids)
@@ -225,7 +279,7 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
             valid_a)
         stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
 
-    neurons = refresh_rate(state.neurons, cfg)
+    neurons = refresh_rate(state.neurons, cfg, alive)
     rates_table = spikes.exchange_rates(neurons.rate, axis_name, num_ranks)
     stats["rates_sent"] = stats["rates_sent"] + float(n)
     return state._replace(neurons=neurons, out_edges=out_edges,
@@ -341,9 +395,10 @@ def _formation_old(cfg, state, local_tree, vac_d_pos, in_edges, gids, skeys,
 
 # ================================================================ driver
 def sim_chunk(state: BrainState, cfg: BrainConfig, rank, axis_name,
-              num_ranks: int) -> BrainState:
-    state = activity_phase(state, cfg, rank, axis_name, num_ranks)
-    state = connectivity_phase(state, cfg, rank, axis_name, num_ranks)
+              num_ranks: int, scenario=None) -> BrainState:
+    state = activity_phase(state, cfg, rank, axis_name, num_ranks, scenario)
+    state = connectivity_phase(state, cfg, rank, axis_name, num_ranks,
+                               scenario)
     return state
 
 
@@ -363,29 +418,34 @@ def _state_specs(state, num_ranks):
     return jax.tree_util.tree_map_with_path(spec, state)
 
 
-def build_sim(cfg: BrainConfig, mesh: Mesh):
-    """Returns (init_fn, chunk_fn) jitted over the 'ranks' mesh."""
+def build_sim(cfg: BrainConfig, mesh: Mesh, scenario=None):
+    """Returns (init_fn, chunk_fn) jitted over the 'ranks' mesh.
+    ``scenario`` (repro.scenarios.protocol.Scenario) is a static experiment
+    description: heterogeneous populations, regions, and event protocols all
+    compile into the same single trace as the default simulation."""
     num_ranks = mesh.shape["ranks"]
 
     def sharded_init():
         def body():
             rank = jax.lax.axis_index("ranks")
-            st = init_state(cfg, rank, num_ranks)
+            st = init_state(cfg, rank, num_ranks, scenario)
             return st
-        shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks))
+        shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks,
+                                                   scenario))
         out_specs = _state_specs(shapes, num_ranks)
-        return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(),
-                                     out_specs=out_specs, check_vma=False))()
+        return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(),
+                                        out_specs=out_specs,
+                                        check_vma=False))()
 
-    shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks))
+    shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks, scenario))
     specs = _state_specs(shapes, num_ranks)
 
     def chunk_body(st):
         rank = jax.lax.axis_index("ranks")
-        return sim_chunk(st, cfg, rank, "ranks", num_ranks)
+        return sim_chunk(st, cfg, rank, "ranks", num_ranks, scenario)
 
-    chunk = jax.jit(jax.shard_map(chunk_body, mesh=mesh, in_specs=(specs,),
-                                  out_specs=specs, check_vma=False),
+    chunk = jax.jit(compat.shard_map(chunk_body, mesh=mesh, in_specs=(specs,),
+                                     out_specs=specs, check_vma=False),
                     donate_argnums=(0,))
     return sharded_init, chunk
 

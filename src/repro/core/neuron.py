@@ -1,13 +1,43 @@
 """MSP phase 1+2: electrical activity (Izhikevich), calcium trace, and
-synaptic-element growth (paper §III-A; parameters from §V-D)."""
+synaptic-element growth (paper §III-A; parameters from §V-D).
+
+All update rules are written against ``NeuronParams`` — either the scalar
+BrainConfig constants (legacy homogeneous sheet) or per-neuron ``(n,)``
+arrays compiled from a scenario's population table
+(repro.scenarios.populations). Scalars and arrays trace to bitwise-identical
+programs when the values agree, so the default path reproduces the seed
+simulation exactly.
+
+``alive`` is the scenario lesion mask (None when no protocol): dead neurons
+hold their membrane at the reset potential, never spike, stop accumulating
+calcium, and have their synaptic elements forced to zero — which makes the
+connectivity phase retract every synapse they own.
+"""
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.msp_brain import BrainConfig
+
+Param = Union[float, jnp.ndarray]   # scalar constant or per-neuron (n,)
+
+
+class NeuronParams(NamedTuple):
+    """Izhikevich + plasticity constants, scalar or per-neuron (n,)."""
+    izh_a: Param
+    izh_b: Param
+    izh_c: Param
+    izh_d: Param
+    growth_rate: Param       # nu
+    target_calcium: Param    # epsilon
+
+
+def params_from_config(cfg: BrainConfig) -> NeuronParams:
+    return NeuronParams(cfg.izh_a, cfg.izh_b, cfg.izh_c, cfg.izh_d,
+                        cfg.element_growth_rate, cfg.target_calcium)
 
 
 class NeuronState(NamedTuple):
@@ -22,14 +52,18 @@ class NeuronState(NamedTuple):
     is_excitatory: jnp.ndarray  # (n,) bool
 
 
-def init_neurons(key, cfg: BrainConfig, n: int) -> NeuronState:
+def init_neurons(key, cfg: BrainConfig, n: int,
+                 params: Optional[NeuronParams] = None,
+                 is_excitatory=None) -> NeuronState:
+    p = params or params_from_config(cfg)
     k1, k2 = jax.random.split(key)
     vac = jax.random.uniform(k1, (n, 2), minval=cfg.initial_vacant_low,
                              maxval=cfg.initial_vacant_high)
-    exc = jnp.arange(n) < int(n * cfg.fraction_excitatory)
+    exc = jnp.arange(n) < int(n * cfg.fraction_excitatory) \
+        if is_excitatory is None else is_excitatory
     return NeuronState(
-        v=jnp.full((n,), cfg.izh_c, jnp.float32),
-        u=jnp.full((n,), cfg.izh_b * cfg.izh_c, jnp.float32),
+        v=jnp.broadcast_to(jnp.asarray(p.izh_c, jnp.float32), (n,)),
+        u=jnp.broadcast_to(jnp.asarray(p.izh_b * p.izh_c, jnp.float32), (n,)),
         calcium=jnp.zeros((n,), jnp.float32),
         ax_elements=vac[:, 0], de_elements=vac[:, 1],
         spiked=jnp.zeros((n,), bool),
@@ -38,40 +72,61 @@ def init_neurons(key, cfg: BrainConfig, n: int) -> NeuronState:
         is_excitatory=exc)
 
 
-def izhikevich_step(st: NeuronState, syn_input, noise, cfg: BrainConfig):
+def izhikevich_step(st: NeuronState, syn_input, noise, cfg: BrainConfig,
+                    params: Optional[NeuronParams] = None):
     """One 1 ms step (two 0.5 ms Euler halves for stability, as in the
     reference Izhikevich implementation)."""
+    p = params or params_from_config(cfg)
     i_t = syn_input + noise
     v, u = st.v, st.u
     for _ in range(2):
         v = v + 0.5 * (0.04 * v * v + 5.0 * v + 140.0 - u + i_t)
-    u = u + cfg.izh_a * (cfg.izh_b * v - u)
+    u = u + p.izh_a * (p.izh_b * v - u)
     spiked = v >= 30.0
-    v = jnp.where(spiked, cfg.izh_c, v)
-    u = jnp.where(spiked, u + cfg.izh_d, u)
+    v = jnp.where(spiked, p.izh_c, v)
+    u = jnp.where(spiked, u + p.izh_d, u)
     return v, u, spiked
 
 
-def update_activity(st: NeuronState, syn_input, noise,
-                    cfg: BrainConfig) -> NeuronState:
-    v, u, spiked = izhikevich_step(st, syn_input, noise, cfg)
+def update_activity(st: NeuronState, syn_input, noise, cfg: BrainConfig,
+                    params: Optional[NeuronParams] = None,
+                    alive=None) -> NeuronState:
+    p = params or params_from_config(cfg)
+    v, u, spiked = izhikevich_step(st, syn_input, noise, cfg, p)
+    if alive is not None:
+        spiked = spiked & alive
+        # dead neurons sit at the reset potential, frozen
+        v = jnp.where(alive, v, jnp.broadcast_to(
+            jnp.asarray(p.izh_c, jnp.float32), v.shape))
+        u = jnp.where(alive, u, st.u)
     calcium = st.calcium + (-st.calcium * cfg.calcium_decay
                             + cfg.calcium_beta * spiked)
     return st._replace(v=v, u=u, spiked=spiked, calcium=calcium,
                        spike_count=st.spike_count + spiked)
 
 
-def update_elements(st: NeuronState, cfg: BrainConfig) -> NeuronState:
+def update_elements(st: NeuronState, cfg: BrainConfig,
+                    params: Optional[NeuronParams] = None,
+                    alive=None) -> NeuronState:
     """Homeostasis: grow elements below target calcium, retract above
-    (paper §III-A(b); linear rule with nu = element_growth_rate)."""
-    drive = 1.0 - st.calcium / cfg.target_calcium
-    grow = cfg.element_growth_rate * drive
-    return st._replace(
-        ax_elements=jnp.maximum(st.ax_elements + grow, 0.0),
-        de_elements=jnp.maximum(st.de_elements + grow, 0.0))
+    (paper §III-A(b); linear rule with nu = element_growth_rate). Lesioned
+    neurons lose all elements (-> full synapse retraction next update)."""
+    p = params or params_from_config(cfg)
+    drive = 1.0 - st.calcium / p.target_calcium
+    grow = p.growth_rate * drive
+    ax = jnp.maximum(st.ax_elements + grow, 0.0)
+    de = jnp.maximum(st.de_elements + grow, 0.0)
+    if alive is not None:
+        ax = jnp.where(alive, ax, 0.0)
+        de = jnp.where(alive, de, 0.0)
+    return st._replace(ax_elements=ax, de_elements=de)
 
 
-def refresh_rate(st: NeuronState, cfg: BrainConfig) -> NeuronState:
-    """Close a rate window: advertised rate = spikes / Delta (new algorithm)."""
+def refresh_rate(st: NeuronState, cfg: BrainConfig, alive=None) -> NeuronState:
+    """Close a rate window: advertised rate = spikes / Delta (new algorithm).
+    Dead neurons advertise zero (their pre-death spikes in this window must
+    not be replayed by remote PRNG reconstruction)."""
     rate = st.spike_count / cfg.rate_period
+    if alive is not None:
+        rate = jnp.where(alive, rate, 0.0)
     return st._replace(rate=rate, spike_count=jnp.zeros_like(st.spike_count))

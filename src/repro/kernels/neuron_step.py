@@ -2,6 +2,13 @@
 calcium trace, and synaptic-element growth in one VPU pass ("Actual activity
 update" + "Update of synaptic elements" in paper Fig. 11, ~16% of the
 optimized runtime; fusing them removes two HBM round-trips over the state).
+
+Heterogeneous populations (repro.scenarios.populations) make the Izhikevich
+constants a/b/c/d, the growth rate nu, and the calcium target eps per-neuron
+``(n,)`` arrays; they stream through the same block pipeline as the state so
+mixed RS/FS/CH/IB sheets cost one fused pass too. The homogeneous path keeps
+every constant compile-time (no extra HBM reads). The global calcium
+kinetics (decay, beta) are always compile-time scalars.
 """
 from __future__ import annotations
 
@@ -12,45 +19,74 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(v_ref, u_ref, ca_ref, ax_ref, de_ref, inp_ref,
-            v_o, u_o, ca_o, ax_o, de_o, sp_o, *, p):
-    v = v_ref[...]
-    u = u_ref[...]
-    i_t = inp_ref[...]
+def _integrate(v, u, ca, ax, de, i_t, a, b, c, d, nu, eps, p):
+    """Shared math; a..eps are scalars or blocks matching v."""
     for _ in range(2):  # two half-ms Euler steps (Izhikevich reference impl)
         v = v + 0.5 * (0.04 * v * v + 5.0 * v + 140.0 - u + i_t)
-    u = u + p["a"] * (p["b"] * v - u)
+    u = u + a * (b * v - u)
     spiked = v >= 30.0
-    v = jnp.where(spiked, p["c"], v)
-    u = jnp.where(spiked, u + p["d"], u)
-    ca = ca_ref[...]
+    v = jnp.where(spiked, c, v)
+    u = jnp.where(spiked, u + d, u)
     ca = ca + (-ca * p["ca_decay"] + p["ca_beta"] * spiked)
-    drive = p["nu"] * (1.0 - ca / p["eps"])
-    v_o[...] = v
-    u_o[...] = u
-    ca_o[...] = ca
-    ax_o[...] = jnp.maximum(ax_ref[...] + drive, 0.0)
-    de_o[...] = jnp.maximum(de_ref[...] + drive, 0.0)
-    sp_o[...] = spiked
+    drive = nu * (1.0 - ca / eps)
+    return v, u, ca, jnp.maximum(ax + drive, 0.0), \
+        jnp.maximum(de + drive, 0.0), spiked
 
 
-def neuron_step(v, u, ca, ax, de, inp, cfg, *, block=1024, interpret=False):
-    """All inputs (N,) f32. Returns (v, u, ca, ax, de, spiked)."""
+def _kernel_homog(v_ref, u_ref, ca_ref, ax_ref, de_ref, inp_ref,
+                  v_o, u_o, ca_o, ax_o, de_o, sp_o, *, p):
+    out = _integrate(v_ref[...], u_ref[...], ca_ref[...], ax_ref[...],
+                     de_ref[...], inp_ref[...],
+                     p["a"], p["b"], p["c"], p["d"], p["nu"], p["eps"], p)
+    for ref, val in zip((v_o, u_o, ca_o, ax_o, de_o, sp_o), out):
+        ref[...] = val
+
+
+def _kernel_hetero(v_ref, u_ref, ca_ref, ax_ref, de_ref, inp_ref,
+                   a_ref, b_ref, c_ref, d_ref, nu_ref, eps_ref,
+                   v_o, u_o, ca_o, ax_o, de_o, sp_o, *, p):
+    out = _integrate(v_ref[...], u_ref[...], ca_ref[...], ax_ref[...],
+                     de_ref[...], inp_ref[...],
+                     a_ref[...], b_ref[...], c_ref[...], d_ref[...],
+                     nu_ref[...], eps_ref[...], p)
+    for ref, val in zip((v_o, u_o, ca_o, ax_o, de_o, sp_o), out):
+        ref[...] = val
+
+
+def neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None, block=1024,
+                interpret=False):
+    """All inputs (N,) f32. Returns (v, u, ca, ax, de, spiked).
+
+    ``params`` is an optional NeuronParams. Python-scalar entries (or
+    params=None, the homogeneous BrainConfig constants) stay compile-time;
+    per-neuron arrays stream through the block pipeline."""
     n = v.shape[0]
     b = min(block, n)
     while n % b:
         b -= 1
-    p = {"a": cfg.izh_a, "b": cfg.izh_b, "c": cfg.izh_c, "d": cfg.izh_d,
-         "ca_decay": cfg.calcium_decay, "ca_beta": cfg.calcium_beta,
-         "nu": cfg.element_growth_rate, "eps": cfg.target_calcium}
+    if params is None:
+        vals = (cfg.izh_a, cfg.izh_b, cfg.izh_c, cfg.izh_d,
+                cfg.element_growth_rate, cfg.target_calcium)
+    else:
+        vals = (params.izh_a, params.izh_b, params.izh_c, params.izh_d,
+                params.growth_rate, params.target_calcium)
+    p = {"ca_decay": cfg.calcium_decay, "ca_beta": cfg.calcium_beta}
     spec = pl.BlockSpec((b,), lambda i: (i,))
     f32 = jnp.float32
+    out_shape = [jax.ShapeDtypeStruct((n,), f32)] * 5 \
+        + [jax.ShapeDtypeStruct((n,), jnp.bool_)]
+    homogeneous = all(not hasattr(x, "ndim") or x.ndim == 0 for x in vals)
+    if homogeneous:
+        p.update(dict(zip(("a", "b", "c", "d", "nu", "eps"),
+                          (float(x) for x in vals))))
+        return pl.pallas_call(
+            functools.partial(_kernel_homog, p=p),
+            grid=(n // b,), in_specs=[spec] * 6, out_specs=[spec] * 6,
+            out_shape=out_shape, interpret=interpret,
+        )(v, u, ca, ax, de, inp)
+    per_neuron = [jnp.broadcast_to(jnp.asarray(x, f32), (n,)) for x in vals]
     return pl.pallas_call(
-        functools.partial(_kernel, p=p),
-        grid=(n // b,),
-        in_specs=[spec] * 6,
-        out_specs=[spec] * 6,
-        out_shape=[jax.ShapeDtypeStruct((n,), f32)] * 5
-        + [jax.ShapeDtypeStruct((n,), jnp.bool_)],
-        interpret=interpret,
-    )(v, u, ca, ax, de, inp)
+        functools.partial(_kernel_hetero, p=p),
+        grid=(n // b,), in_specs=[spec] * 12, out_specs=[spec] * 6,
+        out_shape=out_shape, interpret=interpret,
+    )(v, u, ca, ax, de, inp, *per_neuron)

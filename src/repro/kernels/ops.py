@@ -37,7 +37,9 @@ def gauss_probs(x, y, w, *, sigma: float, interpret=None):
     return bh_gauss_probs(x, y, w, sigma=sigma, interpret=interpret)
 
 
-def fused_neuron_step(v, u, ca, ax, de, inp, cfg, *, interpret=None):
+def fused_neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None,
+                      interpret=None):
     if interpret is None:
         interpret = _interpret_default()
-    return neuron_step(v, u, ca, ax, de, inp, cfg, interpret=interpret)
+    return neuron_step(v, u, ca, ax, de, inp, cfg, params=params,
+                       interpret=interpret)

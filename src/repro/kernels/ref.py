@@ -35,16 +35,21 @@ def bh_gauss_ref(x, y, w, *, sigma: float):
     return p, jnp.sum(p, axis=-1)
 
 
-def neuron_step_ref(v, u, ca, ax, de, inp, cfg):
-    """Mirror of repro.core.neuron.update_activity + update_elements."""
+def neuron_step_ref(v, u, ca, ax, de, inp, cfg, params=None):
+    """Mirror of repro.core.neuron.update_activity + update_elements.
+    ``params`` (NeuronParams, scalar or per-neuron) overrides BrainConfig."""
+    from repro.core.neuron import params_from_config
+    p = params or params_from_config(cfg)
+    a, b, c, d = p.izh_a, p.izh_b, p.izh_c, p.izh_d
+    nu, eps = p.growth_rate, p.target_calcium
     for _ in range(2):
         v = v + 0.5 * (0.04 * v * v + 5.0 * v + 140.0 - u + inp)
-    u = u + cfg.izh_a * (cfg.izh_b * v - u)
+    u = u + a * (b * v - u)
     spiked = v >= 30.0
-    v = jnp.where(spiked, cfg.izh_c, v)
-    u = jnp.where(spiked, u + cfg.izh_d, u)
+    v = jnp.where(spiked, c, v)
+    u = jnp.where(spiked, u + d, u)
     ca = ca + (-ca * cfg.calcium_decay + cfg.calcium_beta * spiked)
-    drive = cfg.element_growth_rate * (1.0 - ca / cfg.target_calcium)
+    drive = nu * (1.0 - ca / eps)
     ax = jnp.maximum(ax + drive, 0.0)
     de = jnp.maximum(de + drive, 0.0)
     return v, u, ca, ax, de, spiked

@@ -7,8 +7,8 @@ inside the factory functions. The dry-run sets
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
+from repro.compat import AxisType
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -16,14 +16,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: 2x16x16 = 512 chips ('pod','data','model')."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(shape, axes,
+                            axis_types=(AxisType.Auto,) * len(shape))
 
 
 def make_mesh(shape, axes):
     """Arbitrary test mesh, e.g. ((2,4), ('data','model')) on host devices."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(shape))
+    return compat.make_mesh(tuple(shape), tuple(axes),
+                            axis_types=(AxisType.Auto,) * len(shape))
 
 
 # TPU v5e hardware model for the roofline (targets, not the CPU runtime)

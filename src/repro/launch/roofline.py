@@ -260,8 +260,18 @@ def analyze_hlo(hlo: str, num_devices: int):
                 contracted = 1
                 cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
                 if operands and cdims:
-                    lhs = operands.group(1).split(",")[0].strip().lstrip("%")
-                    lhs_shape = shapes.get(lhs)
+                    first = operands.group(1)
+                    # operands may be typed ('f32[8,8]{1,0} %x') — shapes
+                    # embed commas, so find the inline shape or the %name
+                    # instead of splitting on ','
+                    mshape = _SHAPE_RE.search(first)
+                    mname = re.search(r"%([\w\.\-]+)", first)
+                    if mshape and first.lstrip().startswith(mshape.group(1)):
+                        lhs_shape = mshape.group(0)
+                    else:
+                        lhs = mname.group(1) if mname else \
+                            first.split(",")[0].strip().lstrip("%")
+                        lhs_shape = shapes.get(lhs)
                     if lhs_shape:
                         _, ldims = shape_elems(lhs_shape)
                         for ci in cdims.group(1).split(","):

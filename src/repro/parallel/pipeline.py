@@ -14,6 +14,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import PartitionSpec as P
 
 
@@ -65,7 +67,7 @@ def pipeline_apply(layer_fn, stage_params, x_microbatches, mesh,
         return outs
 
     pspec = P(axis)
-    return jax.shard_map(
+    return compat.shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: pspec, stage_params), P()),
         out_specs=P(), check_vma=False)(stage_params, x_microbatches)

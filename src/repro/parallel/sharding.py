@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 _REPLICATE_BELOW = 1 << 22          # 4M elements (~8MB bf16)
 
 _mesh_var: contextvars.ContextVar = contextvars.ContextVar("repro_mesh",
@@ -58,14 +60,7 @@ def batch_axes(mesh: Mesh, layout: str = None):
 
 def _manual_axes():
     """Mesh axes currently under manual (shard_map) control at trace time."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-        if am is None or not am.axis_names:
-            return frozenset()
-        return frozenset(a for a, t in zip(am.axis_names, am.axis_types)
-                         if t == jax.sharding.AxisType.Manual)
-    except Exception:
-        return frozenset()
+    return compat.manual_axes()
 
 
 def constrain(x, spec_axes):
@@ -77,6 +72,8 @@ def constrain(x, spec_axes):
     if mesh is None:
         return x
     manual = _manual_axes()
+    if manual and not compat.PARTIAL_MANUAL_CONSTRAINT_OK:
+        return x  # old XLA: constraints inside partial shard_map crash
 
     def drop_manual(ax):
         if ax is None:

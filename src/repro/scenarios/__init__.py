@@ -1,0 +1,40 @@
+"""Scenario subsystem: heterogeneous populations, named regions, and
+declarative stimulus/lesion protocols for the MSP brain (DESIGN.md §3).
+
+The single hard-coded simulation (homogeneous RS sheet under uniform
+N(5,1) drive) becomes a library of runnable experiments:
+
+  populations.py  per-neuron parameter tables (mixed Izhikevich types,
+                  per-population calcium targets / growth rates / weights)
+  regions.py      named spatial regions of the Morton domain, per-region
+                  background drive, region x region connectome matrices
+  protocol.py     declarative event schedules (Stimulate / Lesion /
+                  Recover) + the Scenario container, compiled into
+                  trace-stable per-step drive and alive masks
+  observables.py  device-side ring-buffer recorder (rates, per-region
+                  synapse counts, calcium traces)
+  library.py      end-to-end scenarios (baseline_growth,
+                  focal_stimulation, lesion_rewiring) and run_scenario()
+
+``library`` imports the engine, which imports the other modules here, so it
+is intentionally NOT imported at package-import time — use
+``from repro.scenarios import library``.
+"""
+from repro.scenarios.populations import (IZHIKEVICH_PRESETS, PopulationSpec,
+                                         PopulationTable, build_table,
+                                         default_populations, population,
+                                         table_for)
+from repro.scenarios.protocol import (Lesion, Recover, Scenario, Stimulate,
+                                      alive_mask, has_lesions, stim_drive)
+from repro.scenarios.regions import (Region, assign_regions,
+                                     background_tables, num_buckets,
+                                     region_connectome, region_mask)
+
+__all__ = [
+    "IZHIKEVICH_PRESETS", "PopulationSpec", "PopulationTable", "build_table",
+    "default_populations", "population", "table_for",
+    "Lesion", "Recover", "Scenario", "Stimulate", "alive_mask",
+    "has_lesions", "stim_drive",
+    "Region", "assign_regions", "background_tables", "num_buckets",
+    "region_connectome", "region_mask",
+]

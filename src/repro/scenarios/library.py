@@ -1,0 +1,103 @@
+"""End-to-end scenario library + runner.
+
+Three canonical MSP experiments (the interventions behind the paper's
+Figs. 8/9 quality discussion):
+
+  baseline_growth    heterogeneous sheet (RS / CH excitatory + FS
+                     inhibitory) growing from an empty connectome toward
+                     the calcium target — the seed demo, now with mixed
+                     Izhikevich types.
+  focal_stimulation  extra input current to a focal region mid-run; the
+                     region overshoots its calcium target, retracts
+                     elements, and the connectome tilts toward/away from
+                     the stimulated population.
+  lesion_rewiring    a region dies mid-run: its synapses are retracted
+                     (partners notified), then the surviving network
+                     regrows connectivity among itself.
+
+``run_scenario`` drives any of them on the engine and returns the final
+global state plus the flushed per-region recorder history.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.msp_brain import SMOKE_CONFIG, BrainConfig
+from repro.core import engine
+from repro.scenarios import observables, protocol
+from repro.scenarios.populations import population
+from repro.scenarios.protocol import Lesion, Scenario, Stimulate
+from repro.scenarios.regions import Region
+
+# smoke-scale default: overflow-free buffers so every run is exactly the MSP
+# dynamics (tests/benchmarks compare old vs new bitwise)
+SMOKE_SCENARIO_CONFIG = dataclasses.replace(
+    SMOKE_CONFIG, requests_cap_factor=1000)
+
+
+def baseline_growth() -> Scenario:
+    return Scenario(
+        name="baseline_growth",
+        populations=(
+            population("exc-rs", 0.6, "RS"),
+            population("exc-ch", 0.2, "CH"),
+            population("inh-fs", 0.2, "FS", is_excitatory=False,
+                       synapse_weight=30.0),
+        ),
+        regions=(),
+        events=(),
+        num_chunks=20)
+
+
+def focal_stimulation() -> Scenario:
+    return Scenario(
+        name="focal_stimulation",
+        regions=(Region("focus", lo=(0.0, 0.0, 0.0), hi=(0.5, 0.5, 1.0)),),
+        events=(Stimulate("focus", amplitude=4.0, t0=500, t1=1500),),
+        num_chunks=20)
+
+
+def lesion_rewiring() -> Scenario:
+    return Scenario(
+        name="lesion_rewiring",
+        regions=(Region("core", lo=(0.0, 0.0, 0.0), hi=(0.5, 1.0, 1.0)),),
+        events=(Lesion("core", t=1000),),
+        num_chunks=24)
+
+
+SCENARIOS = {
+    "baseline_growth": baseline_growth,
+    "focal_stimulation": focal_stimulation,
+    "lesion_rewiring": lesion_rewiring,
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]()
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"have {sorted(SCENARIOS)}") from None
+
+
+def run_scenario(scenario: Scenario, cfg: BrainConfig = None,
+                 num_chunks: int = None, mesh=None, recorder_cap: int = None):
+    """Run a scenario end-to-end. Returns (final_state, history) where
+    history is the flushed observables dict (oldest chunk first)."""
+    cfg = cfg or SMOKE_SCENARIO_CONFIG
+    num_chunks = num_chunks or scenario.num_chunks
+    mesh = mesh or engine.make_brain_mesh()
+    init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scenario)
+    st = init_fn()
+    nb = len(scenario.regions) + 1
+    rec = observables.init_recorder(recorder_cap or num_chunks, nb)
+    for i in range(num_chunks):
+        st = chunk(st)
+        alive = protocol.alive_mask(scenario.events, scenario.regions,
+                                    st.positions,
+                                    (i + 1) * cfg.rate_period) \
+            if scenario.events else None
+        rec = observables.record(rec, st.positions, st.neurons.calcium,
+                                 st.neurons.rate, st.out_edges,
+                                 scenario.regions, alive)
+    return st, observables.flush(rec)

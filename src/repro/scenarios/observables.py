@@ -1,0 +1,89 @@
+"""Device-side scenario recorder: a per-chunk ring buffer.
+
+``record`` is pure jnp over the *global* BrainState arrays (positions,
+calcium, rate, out_edges) — call it under jit right after each ``chunk``
+step and nothing leaves the device until ``flush``. The ring has a static
+capacity, so recording is trace-stable and donation-friendly; when more
+chunks than ``cap`` are recorded the oldest entries are overwritten.
+
+Per chunk it stores, per region bucket (named regions + 'rest'):
+mean calcium, mean advertised rate, synapse counts (by source region), the
+full region x region connectome, and a global rate histogram.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.scenarios import regions as regions_mod
+
+RATE_HIST_MAX = 0.5   # rates are spikes/ms; 0.5 == 500 Hz ceiling
+
+
+class Recorder(NamedTuple):
+    idx: jnp.ndarray          # scalar i32: total chunks recorded
+    calcium: jnp.ndarray      # (cap, nb) mean calcium per region
+    rate: jnp.ndarray         # (cap, nb) mean rate per region
+    synapses: jnp.ndarray     # (cap, nb) out-synapses per source region
+    alive: jnp.ndarray        # (cap, nb) neurons alive per region
+    connectome: jnp.ndarray   # (cap, nb, nb) region x region synapse counts
+    rate_hist: jnp.ndarray    # (cap, bins) global rate histogram
+
+
+def init_recorder(cap: int, nb: int, bins: int = 16) -> Recorder:
+    z = functools.partial(jnp.zeros, dtype=jnp.float32)
+    return Recorder(jnp.zeros((), jnp.int32), z((cap, nb)), z((cap, nb)),
+                    z((cap, nb)), z((cap, nb)), z((cap, nb, nb)),
+                    z((cap, bins)))
+
+
+def _segment_mean(values, rid, nb):
+    s = jnp.zeros((nb,), jnp.float32).at[rid].add(values)
+    c = jnp.zeros((nb,), jnp.float32).at[rid].add(1.0)
+    return s / jnp.maximum(c, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("regions",))
+def record(rec: Recorder, positions, calcium, rate, out_edges,
+           regions: Sequence, alive=None) -> Recorder:
+    """Append one chunk worth of observables. All inputs are the global
+    (concatenated-over-ranks) state arrays; ``regions`` is the scenario's
+    static region tuple; ``alive`` an optional (N,) bool mask."""
+    nb = regions_mod.num_buckets(regions)
+    rid = regions_mod.assign_regions(positions, regions)
+    cap = rec.calcium.shape[0]
+    slot = rec.idx % cap
+    alive_f = jnp.ones(rid.shape, jnp.float32) if alive is None \
+        else alive.astype(jnp.float32)
+    conn = regions_mod.region_connectome(out_edges, rid, rid, nb)
+    bins = rec.rate_hist.shape[1]
+    hist = jnp.zeros((bins,), jnp.float32).at[
+        jnp.clip((rate / RATE_HIST_MAX * bins).astype(jnp.int32),
+                 0, bins - 1)].add(1.0)
+    return Recorder(
+        idx=rec.idx + 1,
+        calcium=rec.calcium.at[slot].set(_segment_mean(calcium, rid, nb)),
+        rate=rec.rate.at[slot].set(_segment_mean(rate, rid, nb)),
+        synapses=rec.synapses.at[slot].set(jnp.sum(conn, axis=1)),
+        alive=rec.alive.at[slot].set(
+            jnp.zeros((nb,), jnp.float32).at[rid].add(alive_f)),
+        connectome=rec.connectome.at[slot].set(conn),
+        rate_hist=rec.rate_hist.at[slot].set(hist))
+
+
+def flush(rec: Recorder) -> dict:
+    """Move the ring to host, oldest chunk first. Returns numpy arrays of
+    leading length min(idx, cap)."""
+    idx = int(rec.idx)
+    cap = rec.calcium.shape[0]
+    kept = min(idx, cap)
+    order = (np.arange(idx - kept, idx) % cap) if kept else np.arange(0)
+    out = {"num_recorded": idx}
+    for name in ("calcium", "rate", "synapses", "alive", "connectome",
+                 "rate_hist"):
+        out[name] = np.asarray(getattr(rec, name))[order]
+    return out

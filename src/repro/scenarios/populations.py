@@ -1,0 +1,133 @@
+"""Per-neuron parameter tables: heterogeneous neuron populations.
+
+The seed simulation drives every neuron with the same scalar constants from
+``BrainConfig``. Here a scenario declares a tuple of ``PopulationSpec``s
+(mixed Izhikevich types RS/FS/CH/IB/LTS, per-population calcium targets,
+growth rates, and synapse weights) and ``build_table`` compiles them into
+``(n,)`` arrays — one value per local neuron — that are threaded through
+``core/neuron.py``, ``core/engine.py`` and the fused Pallas kernel.
+
+Assignment is deterministic by local id (contiguous blocks, excitatory
+populations first by convention of the spec order): every rank derives the
+SAME table from (cfg, populations, n), so a neuron's synapse weight and sign
+can be looked up anywhere from ``gid % n`` — the same replicated-derivation
+trick the engine already uses for excitatory/inhibitory signs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.msp_brain import BrainConfig
+
+# Izhikevich (2003) canonical parameter sets.
+IZHIKEVICH_PRESETS = {
+    "RS": dict(izh_a=0.02, izh_b=0.2, izh_c=-65.0, izh_d=8.0),   # regular
+    "IB": dict(izh_a=0.02, izh_b=0.2, izh_c=-55.0, izh_d=4.0),   # bursting
+    "CH": dict(izh_a=0.02, izh_b=0.2, izh_c=-50.0, izh_d=2.0),   # chattering
+    "FS": dict(izh_a=0.1, izh_b=0.2, izh_c=-65.0, izh_d=2.0),    # fast spike
+    "LTS": dict(izh_a=0.02, izh_b=0.25, izh_c=-65.0, izh_d=2.0),  # low-thresh
+}
+
+
+@dataclass(frozen=True)
+class PopulationSpec:
+    """One homogeneous sub-population. ``None`` fields inherit BrainConfig."""
+    name: str
+    fraction: float
+    izh_a: float = 0.02
+    izh_b: float = 0.2
+    izh_c: float = -65.0
+    izh_d: float = 8.0
+    is_excitatory: bool = True
+    target_calcium: Optional[float] = None
+    element_growth_rate: Optional[float] = None
+    synapse_weight: Optional[float] = None   # magnitude; sign from excitatory
+
+
+def population(name: str, fraction: float, kind: str = "RS",
+               **overrides) -> PopulationSpec:
+    """Spec factory from an Izhikevich preset, e.g.
+    ``population('inh', 0.2, 'FS', is_excitatory=False)``."""
+    spec = PopulationSpec(name=name, fraction=fraction,
+                          **IZHIKEVICH_PRESETS[kind])
+    return replace(spec, **overrides) if overrides else spec
+
+
+def default_populations(cfg: BrainConfig) -> Tuple[PopulationSpec, ...]:
+    """The seed model as a 2-population table: RS excitatory/inhibitory split
+    at cfg.fraction_excitatory — bitwise-identical to the scalar path."""
+    izh = dict(izh_a=cfg.izh_a, izh_b=cfg.izh_b, izh_c=cfg.izh_c,
+               izh_d=cfg.izh_d)
+    pops = [PopulationSpec(name="exc", fraction=cfg.fraction_excitatory,
+                           is_excitatory=True, **izh)]
+    if cfg.fraction_excitatory < 1.0:
+        pops.append(PopulationSpec(name="inh",
+                                   fraction=1.0 - cfg.fraction_excitatory,
+                                   is_excitatory=False, **izh))
+    return tuple(pops)
+
+
+class PopulationTable(NamedTuple):
+    """Per-neuron parameter arrays, all shape (n,). Identical on every rank;
+    index with ``gid % n`` for any neuron in the global simulation."""
+    pop_id: jnp.ndarray             # i32
+    izh_a: jnp.ndarray              # f32
+    izh_b: jnp.ndarray
+    izh_c: jnp.ndarray
+    izh_d: jnp.ndarray
+    target_calcium: jnp.ndarray
+    growth_rate: jnp.ndarray
+    synapse_weight: jnp.ndarray     # SIGNED: +magnitude exc / -magnitude inh
+    is_excitatory: jnp.ndarray      # bool
+
+
+def population_sizes(n: int, pops: Sequence[PopulationSpec]) -> np.ndarray:
+    """Block size per population: cumulative-floor so sizes sum to n and the
+    first boundary equals the legacy ``int(n * fraction_excitatory)``."""
+    fr = np.asarray([p.fraction for p in pops], np.float64)
+    if not np.isclose(fr.sum(), 1.0, atol=1e-6):
+        raise ValueError(f"population fractions must sum to 1, got {fr.sum()}")
+    bounds = np.floor(np.cumsum(fr) * n).astype(np.int64)
+    bounds[-1] = n
+    return np.diff(np.concatenate([[0], bounds]))
+
+
+def build_table(cfg: BrainConfig, pops: Sequence[PopulationSpec],
+                n: int) -> PopulationTable:
+    sizes = population_sizes(n, pops)
+
+    def col(field, default, signed=False):
+        vals = []
+        for p, sz in zip(pops, sizes):
+            v = getattr(p, field)
+            v = default if v is None else v
+            if signed:
+                v = v if p.is_excitatory else -v
+            vals.append(np.full(int(sz), v, np.float32))
+        return jnp.asarray(np.concatenate(vals))
+
+    pop_id = jnp.asarray(np.repeat(np.arange(len(pops), dtype=np.int32),
+                                   sizes))
+    exc = jnp.asarray(np.repeat(np.asarray([p.is_excitatory for p in pops]),
+                                sizes))
+    return PopulationTable(
+        pop_id=pop_id,
+        izh_a=col("izh_a", cfg.izh_a),
+        izh_b=col("izh_b", cfg.izh_b),
+        izh_c=col("izh_c", cfg.izh_c),
+        izh_d=col("izh_d", cfg.izh_d),
+        target_calcium=col("target_calcium", cfg.target_calcium),
+        growth_rate=col("element_growth_rate", cfg.element_growth_rate),
+        synapse_weight=col("synapse_weight", cfg.synapse_weight, signed=True),
+        is_excitatory=exc)
+
+
+def table_for(cfg: BrainConfig, scenario, n: int) -> PopulationTable:
+    """The table a scenario implies (scenario None or without populations ->
+    the BrainConfig-equivalent default table)."""
+    pops = getattr(scenario, "populations", ()) or default_populations(cfg)
+    return build_table(cfg, pops, n)

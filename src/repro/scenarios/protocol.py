@@ -1,0 +1,114 @@
+"""Declarative stimulus/lesion protocols, compiled trace-stably.
+
+A protocol is a static tuple of events over *global* step time (1 step =
+1 ms, rate_period steps per chunk). Because the event list is a Python
+constant, compiling it against a traced step index unrolls into a fixed
+stack of masked adds/ands — the jitted ``sim_chunk`` stays trace-stable
+(one XLA program for the whole run, no per-event recompiles).
+
+Semantics inside the engine:
+
+  Stimulate(region, amplitude, t0, t1)  extra input current ``amplitude``
+      to every neuron in ``region`` for steps t0 <= t < t1 (on top of the
+      background N(mean, std) drive).
+  Lesion(region, t)  neurons in ``region`` die at step t: no spikes, zero
+      advertised rate, synaptic elements forced to zero (which retracts all
+      their synapses at the next connectivity update and notifies partners),
+      excluded from Barnes-Hut search and from accepting new synapses.
+  Recover(region, t)  the region's neurons come back online at step t
+      (vacant elements regrow from zero via the homeostatic rule).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.scenarios.regions import Region, region_mask
+
+_NEVER = 1 << 30   # "end of time" for lesions without a matching Recover
+
+
+@dataclass(frozen=True)
+class Stimulate:
+    region: str
+    amplitude: float
+    t0: int
+    t1: int
+
+
+@dataclass(frozen=True)
+class Lesion:
+    region: str
+    t: int
+
+
+@dataclass(frozen=True)
+class Recover:
+    region: str
+    t: int
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A runnable experiment: who the neurons are (populations), where they
+    live (regions), and what happens to them (events)."""
+    name: str
+    populations: Tuple = ()     # () -> BrainConfig-default populations
+    regions: Tuple[Region, ...] = ()
+    events: Tuple = ()
+    num_chunks: int = 20        # suggested run length (chunks of rate_period)
+
+
+def _region(regions: Sequence[Region], name: str) -> Region:
+    for r in regions:
+        if r.name == name:
+            return r
+    raise KeyError(f"protocol references unknown region {name!r}; "
+                   f"have {[r.name for r in regions]}")
+
+
+def has_lesions(scenario) -> bool:
+    return scenario is not None and any(
+        isinstance(e, Lesion) for e in scenario.events)
+
+
+def stim_drive(events, regions: Sequence[Region], positions, step):
+    """(n,) extra input current at traced global ``step``; 0.0 scalar when
+    the protocol has no stimulation events."""
+    drive = jnp.zeros((), jnp.float32)
+    for ev in events:
+        if not isinstance(ev, Stimulate):
+            continue
+        mask = region_mask(positions, _region(regions, ev.region))
+        active = ((step >= ev.t0) & (step < ev.t1)).astype(jnp.float32)
+        drive = drive + ev.amplitude * active * mask
+    return drive
+
+
+def _lesion_windows(events, regions: Sequence[Region]):
+    """Per Lesion event: (region, t_dead, t_recover). A Recover for the same
+    region at a later time closes the window (earliest such Recover wins)."""
+    windows = []
+    for ev in events:
+        if not isinstance(ev, Lesion):
+            continue
+        t1 = min((r.t for r in events
+                  if isinstance(r, Recover) and r.region == ev.region
+                  and r.t > ev.t), default=_NEVER)
+        windows.append((_region(regions, ev.region), ev.t, t1))
+    return windows
+
+
+def alive_mask(events, regions: Sequence[Region], positions, step):
+    """(n,) bool at traced global ``step``: False while inside any lesion
+    window. Returns None when the protocol never lesions (legacy fast path)."""
+    windows = _lesion_windows(events, regions)
+    if not windows:
+        return None
+    alive = jnp.ones((positions.shape[0],), bool)
+    for region, t0, t1 in windows:
+        dead = region_mask(positions, region) & (step >= t0) & (step < t1)
+        alive = alive & ~dead
+    return alive

@@ -1,0 +1,250 @@
+"""Scenario subsystem: population-table invariants, region connectome vs a
+NumPy reference, protocol compilation, lesion-mask correctness in the full
+engine, and the paper's old==new bit-identity under a stimulation protocol."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.msp_brain import BrainConfig
+from repro.core import engine
+from repro.scenarios import (Lesion, Recover, Region, Scenario, Stimulate,
+                             alive_mask, assign_regions, build_table,
+                             default_populations, population,
+                             region_connectome, region_mask, stim_drive)
+from repro.scenarios import library, observables
+from repro.scenarios import populations as pops
+
+
+# ---------------------------------------------------------------- populations
+def test_population_table_invariants():
+    cfg = BrainConfig()
+    n = 100
+    specs = (population("a", 0.6, "RS"),
+             population("b", 0.25, "CH", target_calcium=0.4),
+             population("c", 0.15, "FS", is_excitatory=False,
+                        synapse_weight=42.0, element_growth_rate=5e-3))
+    t = build_table(cfg, specs, n)
+    ids = np.asarray(t.pop_id)
+    # contiguous blocks covering [0, n), sizes by cumulative floor
+    assert ids.shape == (n,)
+    assert (np.sort(ids) == ids).all()
+    assert np.bincount(ids).tolist() == [60, 25, 15]
+    # per-population values land on the right rows
+    np.testing.assert_allclose(np.asarray(t.izh_c)[ids == 1], -50.0)   # CH
+    np.testing.assert_allclose(np.asarray(t.izh_a)[ids == 2], 0.1)     # FS
+    np.testing.assert_allclose(np.asarray(t.target_calcium)[ids == 1], 0.4)
+    np.testing.assert_allclose(np.asarray(t.target_calcium)[ids == 0],
+                               cfg.target_calcium)
+    np.testing.assert_allclose(np.asarray(t.growth_rate)[ids == 2], 5e-3)
+    # inhibitory population: negative signed weight
+    np.testing.assert_allclose(np.asarray(t.synapse_weight)[ids == 2], -42.0)
+    np.testing.assert_allclose(np.asarray(t.synapse_weight)[ids == 0],
+                               cfg.synapse_weight)
+    assert not np.asarray(t.is_excitatory)[ids == 2].any()
+    assert np.asarray(t.is_excitatory)[ids < 2].all()
+
+
+def test_population_default_matches_legacy_split():
+    """The default table reproduces the seed's excitatory/inhibitory layout
+    exactly: boundary at int(n * fraction_excitatory), signed cfg weight."""
+    cfg = BrainConfig(fraction_excitatory=0.8)
+    n = 53
+    t = build_table(cfg, default_populations(cfg), n)
+    legacy_exc = np.arange(n) < int(n * cfg.fraction_excitatory)
+    np.testing.assert_array_equal(np.asarray(t.is_excitatory), legacy_exc)
+    np.testing.assert_allclose(
+        np.asarray(t.synapse_weight),
+        np.where(legacy_exc, cfg.synapse_weight, -cfg.synapse_weight))
+
+
+def test_population_fractions_must_sum_to_one():
+    cfg = BrainConfig()
+    with pytest.raises(ValueError):
+        build_table(cfg, (population("a", 0.5),), 10)
+
+
+# ---------------------------------------------------------------- regions
+def test_region_assignment_first_match_and_rest():
+    regions = (Region("x", (0.0, 0.0, 0.0), (0.5, 1.0, 1.0)),
+               Region("y", (0.0, 0.0, 0.0), (1.0, 0.5, 1.0)))
+    pos = jnp.asarray([[0.2, 0.2, 0.2],    # in both -> first match (0)
+                       [0.7, 0.2, 0.2],    # only y -> 1
+                       [0.7, 0.7, 0.7]])   # neither -> rest (2)
+    np.testing.assert_array_equal(np.asarray(assign_regions(pos, regions)),
+                                  [0, 1, 2])
+    assert bool(region_mask(pos, regions[0])[0])
+
+
+def test_region_connectome_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    n_glob, s = 40, 6
+    regions = (Region("a", hi=(0.5, 1.0, 1.0)),
+               Region("b", lo=(0.5, 0.0, 0.0)))
+    pos = rng.random((n_glob, 3), np.float32)
+    edges = rng.integers(-1, n_glob, (n_glob, s)).astype(np.int32)
+    rid = np.asarray(assign_regions(jnp.asarray(pos), regions))
+    nb = len(regions) + 1
+    got = np.asarray(region_connectome(jnp.asarray(edges), jnp.asarray(rid),
+                                       jnp.asarray(rid), nb))
+    want = np.zeros((nb, nb))
+    for i in range(n_glob):
+        for t in edges[i]:
+            if t >= 0:
+                want[rid[i], rid[t]] += 1
+    np.testing.assert_allclose(got, want)
+    assert got.sum() == (edges >= 0).sum()
+
+
+# ---------------------------------------------------------------- protocol
+def test_protocol_drive_and_alive_windows():
+    regions = (Region("z", hi=(0.5, 1.0, 1.0)),)
+    pos = jnp.asarray([[0.2, 0.5, 0.5], [0.8, 0.5, 0.5]])
+    ev = (Stimulate("z", amplitude=2.5, t0=10, t1=20),
+          Lesion("z", t=30), Recover("z", t=50))
+    for step, want in [(9, [0, 0]), (10, [2.5, 0]), (19, [2.5, 0]),
+                       (20, [0, 0])]:
+        np.testing.assert_allclose(
+            np.asarray(stim_drive(ev, regions, pos, jnp.asarray(step))),
+            want)
+    for step, want in [(29, [1, 1]), (30, [0, 1]), (49, [0, 1]),
+                       (50, [1, 1])]:
+        np.testing.assert_array_equal(
+            np.asarray(alive_mask(ev, regions, pos, jnp.asarray(step))),
+            np.asarray(want, bool))
+    # no lesion events -> None fast path
+    assert alive_mask(ev[:1], regions, pos, jnp.asarray(0)) is None
+
+
+def test_protocol_unknown_region_raises():
+    with pytest.raises(KeyError):
+        stim_drive((Stimulate("nope", 1.0, 0, 1),), (), jnp.zeros((1, 3)),
+                   jnp.asarray(0))
+
+
+# ---------------------------------------------------------------- engine
+SMALL = dataclasses.replace(library.SMOKE_SCENARIO_CONFIG,
+                            neurons_per_rank=48, max_synapses=8)
+
+
+def test_default_scenario_is_bitwise_legacy():
+    """build_sim(scenario=None) and an empty Scenario trace to the same
+    numbers — the subsystem is a strict superset of the seed simulation."""
+    mesh = engine.make_brain_mesh()
+    results = []
+    for scn in (None, Scenario(name="empty")):
+        init_fn, chunk = engine.build_sim(SMALL, mesh, scenario=scn)
+        st = init_fn()
+        for _ in range(2):
+            st = chunk(st)
+        results.append(st)
+    a, b = results
+    np.testing.assert_array_equal(np.asarray(a.out_edges),
+                                  np.asarray(b.out_edges))
+    np.testing.assert_array_equal(np.asarray(a.neurons.calcium),
+                                  np.asarray(b.neurons.calcium))
+    np.testing.assert_array_equal(np.asarray(a.neurons.v),
+                                  np.asarray(b.neurons.v))
+
+
+def test_lesion_kills_activity_and_synapses():
+    """After a lesion: dead neurons have zero rate, zero elements, no edges
+    in either direction, and never spike again; survivors keep running."""
+    cfg = SMALL
+    region = Region("core", hi=(0.5, 1.0, 1.0))
+    scn = Scenario(name="lesion-test", regions=(region,),
+                   events=(Lesion("core", t=cfg.rate_period),))
+    mesh = engine.make_brain_mesh()
+    init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scn)
+    st = init_fn()
+    for _ in range(4):   # lesion lands at the end of chunk 0
+        st = chunk(st)
+    dead = np.asarray(region_mask(st.positions, region))
+    assert dead.any() and not dead.all()
+    rate = np.asarray(st.neurons.rate)
+    assert (rate[dead] == 0).all()
+    assert rate[~dead].sum() > 0
+    assert (np.asarray(st.neurons.ax_elements)[dead] == 0).all()
+    assert (np.asarray(st.neurons.de_elements)[dead] == 0).all()
+    # no edges from or to dead neurons anywhere in the tables
+    out_e, in_e = np.asarray(st.out_edges), np.asarray(st.in_edges)
+    assert (out_e[dead] < 0).all(), "dead neurons still own out-edges"
+    assert (in_e[dead] < 0).all(), "dead neurons still own in-edges"
+    dead_gids = set(np.flatnonzero(dead))
+    live_out = out_e[~dead]
+    live_in = in_e[~dead]
+    assert not (np.isin(live_out[live_out >= 0], list(dead_gids))).any(), \
+        "survivors still point at dead targets"
+    assert not (np.isin(live_in[live_in >= 0], list(dead_gids))).any(), \
+        "survivors still point at dead sources"
+    # membrane frozen at reset potential -> no spikes counted post-lesion
+    assert (np.asarray(st.neurons.spike_count)[dead] == 0).all()
+
+
+def test_old_new_connectivity_identical_under_stimulation():
+    """THE paper invariant survives protocols: both connectivity algorithms
+    form bit-identical synapses while a region is being stimulated."""
+    scn = Scenario(
+        name="stim-eq",
+        regions=(Region("focus", hi=(0.5, 0.5, 1.0)),),
+        events=(Stimulate("focus", amplitude=4.0, t0=50, t1=250),))
+    base = dataclasses.replace(SMALL, spike_alg="old")
+    res = {}
+    for alg in ("old", "new"):
+        cfg = dataclasses.replace(base, connectivity_alg=alg)
+        init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh(),
+                                          scenario=scn)
+        st = init_fn()
+        for _ in range(3):
+            st = chunk(st)
+        res[alg] = (np.sort(np.asarray(st.out_edges), 1),
+                    np.sort(np.asarray(st.in_edges), 1),
+                    float(st.stats["synapses_formed"].sum()))
+    assert res["old"][2] == res["new"][2] > 0
+    np.testing.assert_array_equal(res["old"][0], res["new"][0])
+    np.testing.assert_array_equal(res["old"][1], res["new"][1])
+
+
+def test_stimulation_raises_focus_activity():
+    """Stimulated region fires faster than the rest while the pulse is on."""
+    region = Region("focus", hi=(0.5, 1.0, 1.0))
+    scn = Scenario(name="stim", regions=(region,),
+                   events=(Stimulate("focus", amplitude=6.0, t0=0, t1=400),))
+    init_fn, chunk = engine.build_sim(SMALL, engine.make_brain_mesh(),
+                                      scenario=scn)
+    st = init_fn()
+    for _ in range(2):
+        st = chunk(st)
+    inside = np.asarray(region_mask(st.positions, region))
+    rate = np.asarray(st.neurons.rate)
+    assert inside.any() and (~inside).any()
+    assert rate[inside].mean() > rate[~inside].mean() + 1e-4
+
+
+# ---------------------------------------------------------------- observables
+def test_recorder_ring_and_flush():
+    regions = (Region("a", hi=(0.5, 1.0, 1.0)),)
+    rec = observables.init_recorder(cap=3, nb=2)
+    n = 8
+    pos = jnp.linspace(0.0, 0.99, n)[:, None] * jnp.ones((1, 3))
+    edges = jnp.full((n, 2), -1, jnp.int32)
+    edges = edges.at[0, 0].set(7)   # region a -> rest
+    for i in range(5):
+        rec = observables.record(rec, pos, jnp.full((n,), float(i)),
+                                 jnp.zeros((n,)), edges, regions)
+    out = observables.flush(rec)
+    assert out["num_recorded"] == 5
+    # ring keeps the LAST 3 chunks, oldest first
+    np.testing.assert_allclose(out["calcium"][:, 0], [2.0, 3.0, 4.0])
+    np.testing.assert_allclose(out["synapses"][:, 0], 1.0)   # src region a
+    np.testing.assert_allclose(out["connectome"][-1, 0, 1], 1.0)
+
+
+def test_library_scenarios_construct():
+    for name in library.SCENARIOS:
+        scn = library.get_scenario(name)
+        assert scn.name == name
+    with pytest.raises(KeyError):
+        library.get_scenario("nope")
