@@ -1,0 +1,91 @@
+"""Activity-phase cost: reference jnp scan vs fused Pallas megakernel.
+
+Times one rate window (Delta electrical steps, no connectivity update) of
+the engine's activity phase on a single rank, and counts the HBM bytes one
+*step* touches:
+
+  reference  ``roofline.materialized_bytes`` of the optimized HLO of the
+             activity window / Delta — every per-step ``(n, s_max)``
+             temporary the scan materializes is counted trip-aware;
+  fused      analytic streaming traffic of the single ``pallas_call``
+             (``activity_fused.window_hbm_bytes``) / Delta. On CPU the
+             kernel runs in interpret mode, whose HLO inlines the
+             *interpreter*, so the TPU custom call's traffic (operands in
+             once, state out once, zero per-step temporaries) is computed
+             in closed form instead.
+
+Emits CSV and writes ``BENCH_activity.json`` at the repo root — the
+baseline the perf trajectory records against.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+
+from benchmarks._util import ROOT, emit, time_fn
+from repro import compat
+from repro.configs.msp_brain import BrainConfig
+from repro.core import engine
+from repro.kernels.activity_fused import window_hbm_bytes
+from repro.launch import roofline
+
+
+def make_activity_fn(cfg, mesh):
+    num_ranks = mesh.shape["ranks"]
+    shapes = jax.eval_shape(lambda: engine.init_state(cfg, 0, num_ranks))
+    specs = engine._state_specs(shapes, num_ranks)
+
+    def body(st):
+        rank = jax.lax.axis_index("ranks")
+        return engine.activity_phase(st, cfg, rank, "ranks", num_ranks)
+
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(specs,),
+                                    out_specs=specs, check_vma=False))
+
+
+def main():
+    n = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    base = BrainConfig(neurons_per_rank=n, local_levels=3, frontier_cap=32)
+    mesh = engine.make_brain_mesh()
+    num_ranks = mesh.shape["ranks"]
+    delta = base.rate_period
+
+    # one plasticity round first so the edge tables/rates are representative
+    init_fn, chunk = engine.build_sim(base, mesh)
+    st = chunk(init_fn())
+    jax.block_until_ready(st.positions)
+
+    report = {"n_per_rank": n, "s_max": base.max_synapses,
+              "num_ranks": num_ranks, "delta": delta}
+    times = {}
+    for impl in ("reference", "fused"):
+        cfg = dataclasses.replace(base, activity_impl=impl)
+        act = make_activity_fn(cfg, mesh)
+        dt, _ = time_fn(act, st, iters=3)
+        times[impl] = dt
+        report[f"{impl}_us_per_step"] = dt / delta * 1e6
+        if impl == "reference":
+            hlo = act.lower(st).compile().as_text()
+            report["reference_hbm_bytes_per_step"] = \
+                roofline.materialized_bytes(hlo) / delta
+    report["fused_hbm_bytes_per_step"] = \
+        window_hbm_bytes(n, base.max_synapses, num_ranks) / delta
+    ratio = report["reference_hbm_bytes_per_step"] / \
+        max(report["fused_hbm_bytes_per_step"], 1.0)
+    report["hbm_bytes_ratio"] = ratio
+    assert ratio >= 3.0, f"fused HBM traffic must drop >=3x, got {ratio:.2f}"
+
+    with open(os.path.join(ROOT, "BENCH_activity.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    emit(f"activity_reference_n{n}", times["reference"] / delta * 1e6,
+         f"hbm_B/step={report['reference_hbm_bytes_per_step']:.0f}")
+    emit(f"activity_fused_n{n}", times["fused"] / delta * 1e6,
+         f"hbm_B/step={report['fused_hbm_bytes_per_step']:.0f} "
+         f"({ratio:.0f}x less)")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ def main() -> None:
     sys.stdout.write(run_sub("benchmarks.bench_fig5_lookup", 1, 4096))
     sys.stdout.write(run_sub("benchmarks.bench_tab12_bytes", 4, 256))
     sys.stdout.write(run_sub("benchmarks.bench_fig11_total", 4, 512))
+    sys.stdout.write(run_sub("benchmarks.bench_activity", 1, 256))
     sys.stdout.write(run_sub("benchmarks.bench_fig89_quality", 8))
     sys.stdout.write(run_sub("benchmarks.bench_scenarios", 1))
     # beyond-paper: the technique inside the LM framework

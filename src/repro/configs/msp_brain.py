@@ -45,6 +45,10 @@ class BrainConfig:
     # --- algorithm selection (old = paper baseline, new = paper contribution) ---
     connectivity_alg: str = "new"      # 'old' (move data) | 'new' (move compute)
     spike_alg: str = "new"             # 'old' (per-step IDs) | 'new' (rates + PRNG)
+    # 'reference' = jnp scan (6 passes/step); 'fused' = one Pallas megakernel
+    # per rate window, Delta-resident state (bit-identical; requires
+    # spike_alg='new' and (s_max+16)*4*n bytes of VMEM — see DESIGN.md §5)
+    activity_impl: str = "reference"
     seed: int = 0
 
 

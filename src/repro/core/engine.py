@@ -16,12 +16,11 @@ state.stats; HLO-level collective bytes come from the roofline parser.
 """
 from __future__ import annotations
 
-import functools
-import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
@@ -29,7 +28,9 @@ from repro.configs.msp_brain import BrainConfig
 from repro.core import connectivity as conn
 from repro.core import morton, octree, spikes
 from repro.core.neuron import (NeuronParams, NeuronState, init_neurons,
-                               refresh_rate, update_activity, update_elements)
+                               refresh_rate)
+from repro.kernels import ops as kops
+from repro.kernels.activity_fused import step_core
 from repro.scenarios import populations as pops
 from repro.scenarios import protocol as proto
 from repro.scenarios import regions as regions_mod
@@ -100,54 +101,83 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int,
 # ================================================================ activity
 def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                    num_ranks: int, scenario=None):
-    """rate_period electrical steps (scan). Spike exchange per cfg.spike_alg.
-    A scenario contributes per-neuron parameters (population table),
-    per-region background drive, stimulation currents, and lesion masks —
-    all trace-stable (the event list is a static Python constant)."""
+    """rate_period electrical steps. Spike exchange per cfg.spike_alg; the
+    lowering per cfg.activity_impl:
+
+      'reference'  jax.lax.scan over steps, each step the shared
+                   ``kernels.activity_fused.step_core`` jnp math (~6 fused
+                   passes per step, (n, s_max) temporaries in HBM);
+      'fused'      one Pallas megakernel per window (grid over steps,
+                   Delta-resident state — zero per-step HBM temporaries).
+                   Requires spike_alg='new': the old algorithm's per-step
+                   spiked-ID all-gather cannot live inside a kernel.
+
+    Both draw noise/remote spikes from the same counter-based hash keyed by
+    (seed, chunk*Delta + t, neuron/edge id), so the two lowerings are
+    bit-identical (tests/test_activity_fused.py). A scenario contributes
+    per-neuron parameters (population table), per-region background drive,
+    stimulation currents, and lesion masks — all trace-stable (the event
+    list is a static Python constant)."""
     n = cfg.neurons_per_rank
-    base_key = jax.random.fold_in(jax.random.key(cfg.seed + 1), state.chunk)
     table = pops.table_for(cfg, scenario, n)
-    nparams = _neuron_params(table)
-    # per-SOURCE-neuron signed weight, derivable on any rank from gid % n
-    # (the population table is replicated by construction)
-    src_lid = jnp.where(state.in_edges >= 0, state.in_edges, 0) % n
-    weights = jnp.where(state.in_edges >= 0,
-                        table.synapse_weight[src_lid], 0.0)
+    izh = (table.izh_a, table.izh_b, table.izh_c, table.izh_d,
+           table.growth_rate, table.target_calcium)
+    ca_consts = (cfg.calcium_decay, cfg.calcium_beta)
     regions = scenario.regions if scenario is not None else ()
     events = scenario.events if scenario is not None else ()
     bg_mean, bg_std = regions_mod.background_tables(state.positions, regions,
                                                     cfg)
+    stim = proto.stim_tables(events, regions, state.positions) \
+        if events else None
+    lesions = proto.lesion_tables(events, regions, state.positions) \
+        if events else None
+    ns = state.neurons
+    st7 = (ns.v, ns.u, ns.calcium, ns.ax_elements, ns.de_elements,
+           ns.spiked, ns.spike_count)
+
+    if cfg.activity_impl not in ("reference", "fused"):
+        raise ValueError(f"unknown activity_impl {cfg.activity_impl!r}; "
+                         f"expected 'reference' or 'fused'")
+    if cfg.activity_impl == "fused":
+        if cfg.spike_alg != "new":
+            raise ValueError(
+                "activity_impl='fused' requires spike_alg='new' — the old "
+                "algorithm exchanges spiked IDs every step (a collective), "
+                "which cannot run inside the megakernel")
+        out = kops.fused_activity_window(
+            st7, state.in_edges, table.synapse_weight, state.rates_table,
+            bg_mean, bg_std, state.chunk, rank, seed=cfg.seed,
+            num_steps=cfg.rate_period, izh=izh, ca_consts=ca_consts,
+            stim=stim, lesions=lesions)
+        neurons = ns._replace(v=out[0], u=out[1], calcium=out[2],
+                              ax_elements=out[3], de_elements=out[4],
+                              spiked=out[5], spike_count=out[6])
+        return state._replace(neurons=neurons)
 
     def step(carry, t):
         st, stats = carry
         if cfg.spike_alg == "old":
             all_ids, counts_ = spikes.exchange_spiked_ids(
-                st.spiked, rank, n, axis_name, num_ranks)
+                st[5], rank, n, axis_name, num_ranks)
             hits = spikes.lookup_spikes(all_ids, state.in_edges, n)
             remote_in = hits & ((state.in_edges // n) != rank) \
                 & (state.in_edges >= 0)
             stats = dict(stats, spikes_sent=stats["spikes_sent"]
-                         + jnp.sum(st.spiked).astype(jnp.float32))
+                         + jnp.sum(st[5]).astype(jnp.float32))
         else:
-            remote_in = spikes.reconstruct_spikes(
-                base_key, t, state.rates_table, state.in_edges, rank, n)
-        local_in = spikes.local_spikes(st.spiked, state.in_edges, rank, n)
-        syn_in = jnp.sum((local_in | remote_in) * weights, axis=-1)
-        kk = jax.random.fold_in(base_key, 7_000_000 + t)
-        noise = bg_mean + bg_std * jax.random.normal(kk, (n,))
-        gstep = state.chunk * cfg.rate_period + t
-        if events:
-            noise = noise + proto.stim_drive(events, regions,
-                                             state.positions, gstep)
-        alive = proto.alive_mask(events, regions, state.positions, gstep) \
-            if events else None
-        st = update_activity(st, syn_in, noise, cfg, nparams, alive)
-        st = update_elements(st, cfg, nparams, alive)
+            remote_in = None   # step_core reconstructs from the hash
+        st = step_core(st, state.in_edges, table.synapse_weight,
+                       state.rates_table, bg_mean, bg_std, izh, ca_consts,
+                       cfg.seed, state.chunk * cfg.rate_period + t, rank, n,
+                       stim=stim, lesions=lesions, remote_override=remote_in)
         return (st, stats), None
 
-    (neurons, stats), _ = jax.lax.scan(
-        step, (state.neurons, state.stats),
+    (out, stats), _ = jax.lax.scan(
+        step, (st7, state.stats),
         jnp.arange(cfg.rate_period, dtype=jnp.int32))
+    neurons = ns._replace(v=out[0], u=out[1], calcium=out[2],
+                          ax_elements=out[3], de_elements=out[4],
+                          spiked=out[5], spike_count=out[6])
     return state._replace(neurons=neurons, stats=stats)
 
 
@@ -280,8 +310,14 @@ def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
         stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
 
     neurons = refresh_rate(state.neurons, cfg, alive)
-    rates_table = spikes.exchange_rates(neurons.rate, axis_name, num_ranks)
-    stats["rates_sent"] = stats["rates_sent"] + float(n)
+    if cfg.spike_alg == "old":
+        # the rates table is dead state on the old spike path — skip the
+        # per-chunk all-gather (and its accounting) entirely
+        rates_table = state.rates_table
+    else:
+        rates_table = spikes.exchange_rates(neurons.rate, axis_name,
+                                            num_ranks)
+        stats["rates_sent"] = stats["rates_sent"] + float(n)
     return state._replace(neurons=neurons, out_edges=out_edges,
                           in_edges=in_edges, rates_table=rates_table,
                           chunk=state.chunk + 1, stats=stats)
@@ -404,7 +440,6 @@ def sim_chunk(state: BrainState, cfg: BrainConfig, rank, axis_name,
 
 def make_brain_mesh(devices=None):
     devs = jax.devices() if devices is None else devices
-    import numpy as np
     return Mesh(np.array(devs), ("ranks",))
 
 

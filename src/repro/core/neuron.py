@@ -12,6 +12,14 @@ simulation exactly.
 hold their membrane at the reset potential, never spike, stop accumulating
 calcium, and have their synaptic elements forced to zero — which makes the
 connectivity phase retract every synapse they own.
+
+NOTE: the engine's activity phase no longer calls ``update_activity`` /
+``update_elements`` step by step — their math was absorbed (verbatim) into
+``repro.kernels.activity_fused.step_core``, the single per-step function
+shared by the reference scan and the fused Pallas megakernel (DESIGN.md
+§5). The functions here remain the standalone, documented form of the
+model (used by ``kernels/ref.neuron_step_ref`` and the kernel tests);
+``init_neurons`` and ``refresh_rate`` are still the engine entry points.
 """
 from __future__ import annotations
 

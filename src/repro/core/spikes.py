@@ -8,16 +8,22 @@ buffers model the variable-length ID lists; the benchmarks count the paper's
 8 B/ID alongside the HLO buffer bytes.
 
 New (every Delta): ranks all-exchange per-neuron rates (4 B each); between
-exchanges each receiver draws Bernoulli(rate) per remote edge from a PRNG
-keyed by (edge, step) — no per-step synchronization at all. Local edges always
-see true spikes (the paper applies the approximation only across ranks).
+exchanges each receiver draws Bernoulli(rate) per remote edge from a
+counter-based hash keyed by ``(seed, step, edge)`` — no per-step
+synchronization at all, and (being pure integer math, ``kernels/hash.py``)
+the same stream is reproduced bit-for-bit by the fused activity megakernel
+and the jnp reference path. Local edges always see true spikes (the paper
+applies the approximation only across ranks).
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.msp_brain import BrainConfig
+from repro.kernels.activity_fused import (local_spike_hits,
+                                          reconstruct_remote_spikes)
 
 
 def exchange_spiked_ids(spiked, rank, n: int, axis_name, num_ranks: int):
@@ -45,7 +51,6 @@ def lookup_spikes(all_ids, in_edges, n: int):
     src = in_edges
     valid = src >= 0
     src_rank = jnp.where(valid, src // n, 0)
-    import math
     n_ids = all_ids.shape[1]
     lo = jnp.zeros(src.shape, jnp.int32)
     hi = jnp.full(src.shape, n_ids, jnp.int32)
@@ -70,28 +75,16 @@ def exchange_rates(rate, axis_name, num_ranks: int):
     return jax.lax.all_gather(rate, axis_name)          # (R, n)
 
 
-def reconstruct_spikes(key, step, all_rates, in_edges, rank, n: int):
-    """NEW algorithm, receive side: Bernoulli(rate) per REMOTE edge, PRNG
-    keyed by (edge, step); local edges use true spikes (caller merges).
+def reconstruct_spikes(seed: int, gstep, all_rates, in_edges, rank, n: int):
+    """NEW algorithm, receive side: Bernoulli(rate) per REMOTE edge, from
+    the counter hash keyed by ``(seed, gstep, edge)``; local edges use true
+    spikes (caller merges). Thin alias of the kernel-side implementation —
+    the fused megakernel and this jnp path are the same code.
     Returns (n, S) bool for remote edges (False on local/empty)."""
-    src = in_edges
-    valid = src >= 0
-    src_rank = jnp.where(valid, src // n, 0)
-    src_lid = jnp.where(valid, src % n, 0)
-    remote = valid & (src_rank != rank)
-    rates = all_rates[src_rank, src_lid]
-    k = jax.random.fold_in(key, step)
-    u = jax.random.uniform(k, src.shape)
-    return remote & (u < rates)
+    return reconstruct_remote_spikes(seed, gstep, all_rates, in_edges,
+                                     rank, n)
 
 
 def local_spikes(spiked_last, in_edges, rank, n: int):
     """True spikes for same-rank edges ('virtually free' in the paper)."""
-    src = in_edges
-    valid = src >= 0
-    src_rank = jnp.where(valid, src // n, 0)
-    src_lid = jnp.where(valid, src % n, 0)
-    local = valid & (src_rank == rank)
-    return local & spiked_last[src_lid]
-
-
+    return local_spike_hits(spiked_last, in_edges, rank, n)

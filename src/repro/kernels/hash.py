@@ -1,0 +1,84 @@
+"""Counter-based PRNG shared by the fused activity megakernel and its oracle.
+
+The engine's activity phase needs randomness that is (a) reproducible from
+pure integers — ``(seed, domain, step, entity-id)`` — so the fused Pallas
+kernel and the jnp reference path can draw bit-identical streams without
+threading key arrays through HBM, and (b) cheap vector math (add / xor /
+rotate on u32), so it runs on the VPU inside the kernel.
+
+We use the full 20-round Threefry-2x32 block cipher (Salmon et al. 2011,
+the same primitive behind ``jax.random``'s default implementation) with the
+key derived from ``(seed, domain)`` and the counter from ``(step, entity)``.
+Every function here is plain ``jnp`` elementwise math: the *same* Python
+code executes inside a Pallas kernel body and in the reference scan, which
+is what makes fused == reference bit-for-bit (DESIGN.md §5).
+
+Entity ids: per-neuron streams use the global neuron id, per-edge streams
+use ``dst_gid * s_max + slot``. Ids are folded mod 2^32 — collisions across
+domains are prevented by the domain word in the key.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Domain separators (arbitrary distinct u32 constants).
+NOISE_DOMAIN = 0x6E6F6973    # per-neuron background-noise gaussians
+SPIKE_DOMAIN = 0x73706B73    # per-edge Bernoulli(rate) reconstruction
+
+_PARITY = 0x1BD11BDA         # threefry key-schedule parity constant
+_ROT_A = (13, 15, 26, 6)     # rotation schedule, even 4-round groups
+_ROT_B = (17, 29, 16, 24)    # rotation schedule, odd 4-round groups
+
+
+def _u32(x):
+    if isinstance(x, int):   # Python ints >= 2^31 overflow the i32 default
+        return jnp.uint32(x & 0xFFFFFFFF)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _rotl(x, r: int):
+    return (x << jnp.uint32(r)) | (x >> jnp.uint32(32 - r))
+
+
+def threefry2x32(k0, k1, c0, c1):
+    """Full 20-round Threefry-2x32: key (k0, k1), counter (c0, c1).
+    All args int scalars/arrays (broadcast together); returns two u32."""
+    k0, k1, x0, x1 = _u32(k0), _u32(k1), _u32(c0), _u32(c1)
+    k2 = k0 ^ k1 ^ jnp.uint32(_PARITY)
+    ks = (k0, k1, k2)
+    x0 = x0 + k0
+    x1 = x1 + k1
+    for g in range(5):
+        rots = _ROT_A if g % 2 == 0 else _ROT_B
+        for r in rots:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r) ^ x0
+        x0 = x0 + ks[(g + 1) % 3]
+        x1 = x1 + ks[(g + 2) % 3] + jnp.uint32(g + 1)
+    return x0, x1
+
+
+def bits(seed: int, domain: int, ctr, entity):
+    """Two u32 words of hash output for (seed, domain, ctr, entity)."""
+    return threefry2x32(seed, domain, ctr, entity)
+
+
+def _to_unit(word):
+    """u32 -> f32 uniform in [0, 1): top 24 bits, exactly representable."""
+    return (word >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0 ** -24)
+
+
+def uniform(seed: int, domain: int, ctr, entity):
+    """f32 uniform in [0, 1), elementwise over broadcast(ctr, entity)."""
+    x0, _ = bits(seed, domain, ctr, entity)
+    return _to_unit(x0)
+
+
+def normal(seed: int, domain: int, ctr, entity):
+    """f32 standard normal via Box-Muller on the two hash words.
+    1-u1 lies in (2^-24, 1], so the log never sees zero."""
+    x0, x1 = bits(seed, domain, ctr, entity)
+    u1 = _to_unit(x0)
+    u2 = _to_unit(x1)
+    r = jnp.sqrt(jnp.float32(-2.0) * jnp.log1p(-u1))
+    return r * jnp.cos(jnp.float32(2.0 * 3.14159265358979) * u2)

@@ -59,11 +59,19 @@ def neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None, block=1024,
 
     ``params`` is an optional NeuronParams. Python-scalar entries (or
     params=None, the homogeneous BrainConfig constants) stay compile-time;
-    per-neuron arrays stream through the block pipeline."""
+    per-neuron arrays stream through the block pipeline.
+
+    n that is not a multiple of the block is padded up to it (zero lanes
+    integrate harmlessly and are sliced off) — shrinking the block to a
+    divisor would degrade to block=1 for prime n."""
     n = v.shape[0]
     b = min(block, n)
-    while n % b:
-        b -= 1
+    n_pad = -(-n // b) * b
+
+    def pad(x):
+        return jnp.pad(x, (0, n_pad - n)) if n_pad != n else x
+
+    v, u, ca, ax, de, inp = (pad(x) for x in (v, u, ca, ax, de, inp))
     if params is None:
         vals = (cfg.izh_a, cfg.izh_b, cfg.izh_c, cfg.izh_d,
                 cfg.element_growth_rate, cfg.target_calcium)
@@ -73,20 +81,23 @@ def neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None, block=1024,
     p = {"ca_decay": cfg.calcium_decay, "ca_beta": cfg.calcium_beta}
     spec = pl.BlockSpec((b,), lambda i: (i,))
     f32 = jnp.float32
-    out_shape = [jax.ShapeDtypeStruct((n,), f32)] * 5 \
-        + [jax.ShapeDtypeStruct((n,), jnp.bool_)]
+    out_shape = [jax.ShapeDtypeStruct((n_pad,), f32)] * 5 \
+        + [jax.ShapeDtypeStruct((n_pad,), jnp.bool_)]
     homogeneous = all(not hasattr(x, "ndim") or x.ndim == 0 for x in vals)
     if homogeneous:
         p.update(dict(zip(("a", "b", "c", "d", "nu", "eps"),
                           (float(x) for x in vals))))
-        return pl.pallas_call(
+        outs = pl.pallas_call(
             functools.partial(_kernel_homog, p=p),
-            grid=(n // b,), in_specs=[spec] * 6, out_specs=[spec] * 6,
+            grid=(n_pad // b,), in_specs=[spec] * 6, out_specs=[spec] * 6,
             out_shape=out_shape, interpret=interpret,
         )(v, u, ca, ax, de, inp)
-    per_neuron = [jnp.broadcast_to(jnp.asarray(x, f32), (n,)) for x in vals]
-    return pl.pallas_call(
-        functools.partial(_kernel_hetero, p=p),
-        grid=(n // b,), in_specs=[spec] * 12, out_specs=[spec] * 6,
-        out_shape=out_shape, interpret=interpret,
-    )(v, u, ca, ax, de, inp, *per_neuron)
+    else:
+        per_neuron = [pad(jnp.broadcast_to(jnp.asarray(x, f32), (n,)))
+                      for x in vals]
+        outs = pl.pallas_call(
+            functools.partial(_kernel_hetero, p=p),
+            grid=(n_pad // b,), in_specs=[spec] * 12, out_specs=[spec] * 6,
+            out_shape=out_shape, interpret=interpret,
+        )(v, u, ca, ax, de, inp, *per_neuron)
+    return tuple(o[:n] for o in outs) if n_pad != n else outs

@@ -11,6 +11,7 @@ import os
 
 import jax
 
+from repro.kernels.activity_fused import activity_window
 from repro.kernels.bh_gauss import bh_gauss_probs
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.neuron_step import neuron_step
@@ -43,3 +44,16 @@ def fused_neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None,
         interpret = _interpret_default()
     return neuron_step(v, u, ca, ax, de, inp, cfg, params=params,
                        interpret=interpret)
+
+
+def fused_activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
+                          chunk, rank, *, seed, num_steps, izh, ca_consts,
+                          stim=None, lesions=None, interpret=None):
+    """Whole-rate-window activity megakernel (see kernels/activity_fused.py).
+    Not jitted here: it runs inside the engine's jitted shard_map."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
+                           chunk, rank, seed=seed, num_steps=num_steps,
+                           izh=izh, ca_consts=ca_consts, stim=stim,
+                           lesions=lesions, interpret=interpret)

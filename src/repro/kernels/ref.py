@@ -35,6 +35,28 @@ def bh_gauss_ref(x, y, w, *, sigma: float):
     return p, jnp.sum(p, axis=-1)
 
 
+def activity_window_ref(state, in_edges, w_table, rates, bg_mean, bg_std,
+                        chunk, rank, *, seed: int, num_steps: int, izh,
+                        ca_consts, stim=None, lesions=None):
+    """jnp oracle for ``activity_fused.activity_window``: the same
+    ``step_core`` math scanned over the window with ``jax.lax.scan``.
+    The Pallas kernel must match this bit-for-bit in interpret mode
+    (tests/test_activity_fused.py)."""
+    from repro.kernels.activity_fused import step_core
+    n = state[0].shape[0]
+    chunk = jnp.asarray(chunk, jnp.int32)
+
+    def step(carry, t):
+        new = step_core(carry, in_edges, w_table, rates, bg_mean, bg_std,
+                        izh, ca_consts, seed, chunk * num_steps + t, rank,
+                        n, stim=stim, lesions=lesions)
+        return new, None
+
+    out, _ = jax.lax.scan(step, tuple(state),
+                          jnp.arange(num_steps, dtype=jnp.int32))
+    return out
+
+
 def neuron_step_ref(v, u, ca, ax, de, inp, cfg, params=None):
     """Mirror of repro.core.neuron.update_activity + update_elements.
     ``params`` (NeuronParams, scalar or per-neuron) overrides BrainConfig."""

@@ -290,6 +290,44 @@ def analyze_hlo(hlo: str, num_devices: int):
     }
 
 
+# ops whose result is a view / control construct, not an HBM buffer write
+_NON_MATERIAL = {
+    "parameter", "constant", "iota", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "custom-call", "after-all", "domain",
+    "partition-id", "replica-id", "rng-get-and-update-state",
+}
+
+
+def materialized_bytes(hlo: str) -> float:
+    """Trip-count-aware sum of result-buffer bytes over every materializing
+    op in the optimized HLO — a proxy for HBM write traffic of the lowering
+    (each buffer is also read at least once downstream, so relative
+    comparisons of two lowerings track total traffic).
+
+    Ops inside fusion computations are skipped (the fusion's own result is
+    the only materialized buffer); while bodies are multiplied by their trip
+    counts, so a scan-over-steps counts every per-step temporary."""
+    comps = _parse_computations(hlo)
+    mult = _multipliers(comps)
+    fused = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.kind == "fusion":
+                fused.update(_called_comps(op))
+    total = 0.0
+    for cname, ops in comps.items():
+        if cname in fused:
+            continue
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        for op in ops:
+            if op.kind in _NON_MATERIAL:
+                continue
+            total += m * shape_bytes(op.shape)
+    return total
+
+
 def roofline_terms(dot_flops_per_dev: float, mem_bytes_per_dev: float,
                    coll_bytes_per_dev: float, ici_links: float = 4.0):
     """Three roofline terms in seconds (per device, per step)."""

@@ -25,7 +25,8 @@ from repro.scenarios.populations import (IZHIKEVICH_PRESETS, PopulationSpec,
                                          default_populations, population,
                                          table_for)
 from repro.scenarios.protocol import (Lesion, Recover, Scenario, Stimulate,
-                                      alive_mask, has_lesions, stim_drive)
+                                      alive_mask, has_lesions, lesion_tables,
+                                      stim_drive, stim_tables)
 from repro.scenarios.regions import (Region, assign_regions,
                                      background_tables, num_buckets,
                                      region_connectome, region_mask)
@@ -34,7 +35,7 @@ __all__ = [
     "IZHIKEVICH_PRESETS", "PopulationSpec", "PopulationTable", "build_table",
     "default_populations", "population", "table_for",
     "Lesion", "Recover", "Scenario", "Stimulate", "alive_mask",
-    "has_lesions", "stim_drive",
+    "has_lesions", "lesion_tables", "stim_drive", "stim_tables",
     "Region", "assign_regions", "background_tables", "num_buckets",
     "region_connectome", "region_mask",
 ]

@@ -101,6 +101,36 @@ def _lesion_windows(events, regions: Sequence[Region]):
     return windows
 
 
+def stim_tables(events, regions: Sequence[Region], positions):
+    """Compile Stimulate events into activity-kernel operands:
+    ``((E, n) f32 region masks, ((amplitude, t0, t1), ...))`` with the time
+    windows static — the kernel/reference step evaluates
+    ``amplitude * (t0 <= gstep < t1) * mask`` per event, which is exactly
+    ``stim_drive`` unrolled. Returns None when the protocol never
+    stimulates."""
+    evs = [e for e in events if isinstance(e, Stimulate)]
+    if not evs:
+        return None
+    masks = jnp.stack([
+        region_mask(positions, _region(regions, e.region)).astype(jnp.float32)
+        for e in evs])
+    meta = tuple((float(e.amplitude), int(e.t0), int(e.t1)) for e in evs)
+    return masks, meta
+
+
+def lesion_tables(events, regions: Sequence[Region], positions):
+    """Compile lesion windows into activity-kernel operands:
+    ``((W, n) bool region masks, ((t_dead, t_recover), ...))`` — the
+    kernel/reference step rebuilds ``alive_mask`` from them at each traced
+    step. Returns None when the protocol never lesions."""
+    windows = _lesion_windows(events, regions)
+    if not windows:
+        return None
+    masks = jnp.stack([region_mask(positions, r) for r, _, _ in windows])
+    meta = tuple((int(t0), int(t1)) for _, t0, t1 in windows)
+    return masks, meta
+
+
 def alive_mask(events, regions: Sequence[Region], positions, step):
     """(n,) bool at traced global ``step``: False while inside any lesion
     window. Returns None when the protocol never lesions (legacy fast path)."""

@@ -72,6 +72,28 @@ def test_bh_gauss(n, m, sigma):
                                rtol=max(tol, 1e-4), atol=max(tol, 1e-4))
 
 
+@pytest.mark.parametrize("n,block", [(131, 64), (1031, 1024)])
+def test_neuron_step_pads_non_divisible_n(n, block):
+    """n not divisible by the block is padded up and sliced, instead of
+    shrinking the block to a divisor (prime n used to degrade to block=1)."""
+    from repro.kernels.neuron_step import neuron_step
+    cfg = BrainConfig()
+    k = jax.random.key(11)
+    v = jax.random.normal(jax.random.fold_in(k, 1), (n,)) * 5 - 60
+    u = jax.random.normal(jax.random.fold_in(k, 2), (n,)) * 2 - 13
+    ca = jax.random.uniform(jax.random.fold_in(k, 3), (n,))
+    ax = jax.random.uniform(jax.random.fold_in(k, 4), (n,)) * 2
+    de = jax.random.uniform(jax.random.fold_in(k, 5), (n,)) * 2
+    inp = jax.random.normal(jax.random.fold_in(k, 6), (n,)) * 5
+    outs = neuron_step(v, u, ca, ax, de, inp, cfg, block=block,
+                       interpret=True)
+    refs = ref.neuron_step_ref(v, u, ca, ax, de, inp, cfg)
+    for name, a, b in zip(["v", "u", "ca", "ax", "de"], outs, refs):
+        assert a.shape == (n,)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3,
+                                   atol=1e-3, err_msg=name)
+
+
 @pytest.mark.parametrize("n", [64, 1000, 4096])
 def test_neuron_step(n):
     cfg = BrainConfig()
