@@ -1,0 +1,144 @@
+"""Connectivity-update cost: reference jnp phase-B vs the fused Pallas
+Barnes-Hut traversal kernel (connectivity_impl).
+
+Times one full connectivity update (deletion routing + octree build +
+phase A + phase B + accept) on a single rank for both lowerings, and counts
+materialized HBM bytes:
+
+  reference  ``roofline.materialized_bytes`` of the optimized HLO of the
+             whole update — every (Q, F) frontier temporary the restart
+             loop materializes is counted trip-aware. NB on CPU XLA
+             additionally *serializes* the frontier scatters into
+             per-update-element while loops, so the reference count is a
+             lowering-specific upper proxy (the metric's documented
+             contract: relative comparisons of lowerings, not absolute
+             HBM truth);
+  fused      the reference total minus the roofline bytes of the standalone
+             phase-B lowering, plus the traversal kernel's analytic
+             streaming traffic (``bh_traverse.traverse_hbm_bytes``: tree +
+             members + neuron data + queries in once, results out once,
+             zero per-round temporaries). On CPU the kernel runs in
+             interpret mode, whose HLO inlines the *interpreter*, so the
+             TPU custom call's traffic is computed in closed form instead
+             (the same accounting bench_activity uses).
+
+Emits CSV and writes ``BENCH_connectivity.json`` at the repo root — the
+baseline the perf trajectory records against (n per rank in {256, 1024};
+``--smoke`` runs n=64 only for CI).
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import ROOT, emit, time_fn
+from repro import compat
+from repro.configs.msp_brain import BrainConfig
+from repro.connectome import routing, traverse
+from repro.connectome import tree as ctree
+from repro.core import engine
+from repro.kernels.bh_traverse import traverse_hbm_bytes
+from repro.launch import roofline
+
+
+def make_conn_fn(cfg, mesh):
+    num_ranks = mesh.shape["ranks"]
+    shapes = jax.eval_shape(lambda: engine.init_state(cfg, 0, num_ranks))
+    specs = engine._state_specs(shapes, num_ranks)
+
+    def body(st):
+        rank = jax.lax.axis_index("ranks")
+        return engine.connectivity_phase(st, cfg, rank, "ranks", num_ranks)
+
+    return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(specs,),
+                                    out_specs=specs, check_vma=False))
+
+
+def phase_b_reference_bytes(cfg, st, num_ranks):
+    """Roofline bytes of the standalone jnp phase-B at the update's shapes
+    (the part the fused kernel replaces)."""
+    n = cfg.neurons_per_rank
+    q = num_ranks * routing.cap_requests(cfg, num_ranks)
+    vac = jnp.maximum(st.neurons.de_elements, 0.0)
+    tree = ctree.build_local_tree(st.positions, vac, 0, cfg, num_ranks)
+    stacked = traverse.stack_levels(tree.counts, tree.centroids, 0)
+    kw = dict(seed=cfg.seed, sizes=stacked.sizes, theta=cfg.theta,
+              sigma=cfg.sigma, frontier=cfg.frontier_cap,
+              n_levels=cfg.local_levels + 1)
+
+    def f(counts, cents, members, npos, vac, x, start, gids, valid):
+        return traverse.phase_b_core(counts, cents, members, npos, vac, x,
+                                     start, gids, valid, jnp.int32(0),
+                                     jnp.int32(0), **kw)
+
+    args = (stacked.counts, stacked.centroids, tree.leaf_members,
+            st.positions, vac, jnp.zeros((q, 3), jnp.float32),
+            jnp.zeros((q,), jnp.int32), jnp.zeros((q,), jnp.int32),
+            jnp.ones((q,), bool))
+    hlo = jax.jit(f).lower(*args).compile().as_text()
+    return roofline.materialized_bytes(hlo), q, tree, stacked
+
+
+def bench_one(n, mesh):
+    base = BrainConfig(neurons_per_rank=n, local_levels=3, frontier_cap=32)
+    num_ranks = mesh.shape["ranks"]
+
+    # one plasticity round first so the edge tables/rates are representative
+    init_fn, chunk = engine.build_sim(base, mesh)
+    st = chunk(init_fn())
+    jax.block_until_ready(st.positions)
+
+    rep = {"n_per_rank": n, "s_max": base.max_synapses,
+           "num_ranks": num_ranks}
+    times = {}
+    for impl in ("reference", "fused"):
+        cfg = dataclasses.replace(base, connectivity_impl=impl)
+        fn = make_conn_fn(cfg, mesh)
+        dt, _ = time_fn(fn, st, iters=3)
+        times[impl] = dt
+        rep[f"{impl}_us_per_update"] = dt * 1e6
+        if impl == "reference":
+            hlo = fn.lower(st).compile().as_text()
+            rep["reference_hbm_bytes_per_update"] = \
+                roofline.materialized_bytes(hlo)
+
+    pb_bytes, q, tree, stacked = phase_b_reference_bytes(base, st, num_ranks)
+    rep["reference_phase_b_hbm_bytes"] = pb_bytes
+    n_levels, c_max = stacked.counts.shape
+    kernel_bytes = traverse_hbm_bytes(
+        n_levels, c_max, tree.leaf_members.shape[0],
+        tree.leaf_members.shape[1], n, q)
+    rep["fused_phase_b_hbm_bytes"] = kernel_bytes
+    rep["fused_hbm_bytes_per_update"] = \
+        rep["reference_hbm_bytes_per_update"] - pb_bytes + kernel_bytes
+    rep["hbm_bytes_ratio"] = rep["reference_hbm_bytes_per_update"] / \
+        max(rep["fused_hbm_bytes_per_update"], 1.0)
+    rep["phase_b_queries"] = q
+    assert rep["hbm_bytes_ratio"] >= 1.0, \
+        f"fused must not touch MORE HBM, got {rep['hbm_bytes_ratio']:.2f}x"
+    return rep, times
+
+
+def main():
+    smoke = "--smoke" in sys.argv
+    sizes = [64] if smoke else [256, 1024]
+    mesh = engine.make_brain_mesh()
+    report = {"smoke": smoke}
+    for n in sizes:
+        rep, times = bench_one(n, mesh)
+        report[f"n{n}"] = rep
+        emit(f"connectivity_reference_n{n}", times["reference"] * 1e6,
+             f"hbm_B/update={rep['reference_hbm_bytes_per_update']:.0f}")
+        emit(f"connectivity_fused_n{n}", times["fused"] * 1e6,
+             f"hbm_B/update={rep['fused_hbm_bytes_per_update']:.0f} "
+             f"({rep['hbm_bytes_ratio']:.1f}x less)")
+    with open(os.path.join(ROOT, "BENCH_connectivity.json"), "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

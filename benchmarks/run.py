@@ -21,6 +21,9 @@ def main() -> None:
     sys.stdout.write(run_sub("benchmarks.bench_tab12_bytes", 4, 256))
     sys.stdout.write(run_sub("benchmarks.bench_fig11_total", 4, 512))
     sys.stdout.write(run_sub("benchmarks.bench_activity", 1, 256))
+    # --smoke: the full n=256/1024 baseline brushes the subprocess timeout;
+    # refresh BENCH_connectivity.json by running the module directly
+    sys.stdout.write(run_sub("benchmarks.bench_connectivity", 1, "--smoke"))
     sys.stdout.write(run_sub("benchmarks.bench_fig89_quality", 8))
     sys.stdout.write(run_sub("benchmarks.bench_scenarios", 1))
     # beyond-paper: the technique inside the LM framework

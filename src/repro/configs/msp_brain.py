@@ -49,6 +49,12 @@ class BrainConfig:
     # per rate window, Delta-resident state (bit-identical; requires
     # spike_alg='new' and (s_max+16)*4*n bytes of VMEM — see DESIGN.md §5)
     activity_impl: str = "reference"
+    # phase-B Barnes-Hut lowering: 'reference' = jnp frontier expansion;
+    # 'fused' = the Pallas traversal kernel (kernels/bh_traverse.py) — the
+    # whole restart loop per query block with the tree VMEM-resident,
+    # bit-identical to the reference (shared core math + counter-hash PRNG;
+    # DESIGN.md §6). Works with either connectivity_alg.
+    connectivity_impl: str = "reference"
     seed: int = 0
 
 

@@ -1,0 +1,178 @@
+"""Formation/deletion request routing over the ranks mesh — the paper's
+byte-counted record exchanges (§IV-A):
+
+OLD ("move data"): the searching rank downloads the remote subtrees (modeled
+as the all-gather of every rank's local tree + leaf neuron data — the
+cache-everything endpoint of the paper's RMA+cache scheme) and finishes the
+search locally. Then a plain formation request (source id, target id, type:
+17 B in the paper) is all-to-all exchanged for accept/decline.
+
+NEW ("move compute", location-aware): the searching rank ships a
+formation-AND-calculation request — source id, source position, target node,
+node kind, cell type: 42 B — to the rank owning the branch cell; that rank
+finishes the search against its own subtree (zero additional communication)
+and answers with (found id, success): 9 B.
+
+Both run the identical phase-B search code against the same tree content,
+keyed to the searcher's gid (connectome.traverse), so they form bit-identical
+synapses — tested in tests/test_multidevice.py and tests/test_connectome.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectome import synapses as syn
+from repro.connectome import traverse
+from repro.connectome import tree as ctree
+
+
+def cap_requests(cfg, num_ranks: int):
+    """Per-(source, dest)-rank request buffer capacity. Locality skews demand
+    toward the home rank, so tests/benchmarks needing zero overflow set
+    requests_cap_factor >= num_ranks (=> cap = n)."""
+    n = cfg.neurons_per_rank
+    per_dest = max(n // max(num_ranks, 1), 1) * cfg.requests_cap_factor
+    return min(n, max(32, -(-per_dest // 8) * 8))
+
+
+def cap_deletions(cfg, lesions: bool = False):
+    """Deletion-message buffer capacity. Lesion protocols retract EVERY edge
+    of a dead neuron in one update, so the cap then scales with
+    requests_cap_factor like the formation buffers (n * s_max is the most a
+    rank can ever send to one destination); without lesions the seed's
+    homeostatic trickle keeps the original small buffer (and its collective
+    bytes) unchanged."""
+    n = cfg.neurons_per_rank
+    if not lesions:
+        return max(16, n // 4)
+    return min(n * cfg.max_synapses,
+               max(16, (n // 4) * cfg.requests_cap_factor))
+
+
+def route_deletions(kill, edges, my_gid_col, cfg, axis_name, num_ranks: int,
+                    lesions: bool):
+    """All-to-all the (partner gid, my gid) retraction notifications (paper:
+    'the affected partner gains a vacant element'). Returns the received
+    (num_ranks * cap, 2) messages and the dropped-notification count."""
+    n = cfg.neurons_per_rank
+    flat_other = jnp.where(kill, edges, -1).reshape(-1)
+    flat_mine = jnp.broadcast_to(my_gid_col, kill.shape).reshape(-1)
+    valid = flat_other >= 0
+    dest = jnp.where(valid, flat_other // n, num_ranks)
+    cap = cap_deletions(cfg, lesions)
+    slot = ctree.positions_within(dest, num_ranks + 1)
+    ok = valid & (slot < cap)
+    buf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
+    buf = buf.at[jnp.where(ok, dest, num_ranks),
+                 jnp.where(ok, slot, 0)].set(
+        jnp.stack([jnp.where(ok, flat_other, -1),
+                   jnp.where(ok, flat_mine, -1)], -1), mode="drop")
+    if num_ranks > 1:
+        buf = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=True)
+    return buf.reshape(num_ranks * cap, 2), \
+        jnp.sum(valid & ~ok).astype(jnp.float32)
+
+
+def formation_new(cfg, positions, local_tree, vacant_d, in_edges, gids,
+                  branch_cell, owner, start_rel, valid_a, rank, axis_name,
+                  num_ranks: int, key, chunk):
+    """Location-aware algorithm: 42B requests out, local phase B + accept,
+    9B responses back. Returns (tgt_gid, accept dict, overflow count)."""
+    n = cfg.neurons_per_rank
+    cap = cap_requests(cfg, num_ranks)
+    dest = jnp.where(valid_a, owner, num_ranks)
+    slot = ctree.positions_within(dest, num_ranks + 1)
+    ok = valid_a & (slot < cap)
+    ovf = jnp.sum(valid_a & ~ok).astype(jnp.float32)
+
+    ibuf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)   # src_gid, start_cell
+    fbuf = jnp.zeros((num_ranks, cap, 3), jnp.float32)    # position
+    d_c = jnp.where(ok, dest, num_ranks)
+    s_c = jnp.where(ok, slot, 0)
+    ibuf = ibuf.at[d_c, s_c].set(
+        jnp.stack([jnp.where(ok, gids, -1), start_rel], -1), mode="drop")
+    fbuf = fbuf.at[d_c, s_c].set(positions, mode="drop")
+    if num_ranks > 1:
+        ibuf = jax.lax.all_to_all(ibuf, axis_name, 0, 0, tiled=True)
+        fbuf = jax.lax.all_to_all(fbuf, axis_name, 0, 0, tiled=True)
+
+    r_src = ibuf[..., 0].reshape(-1)
+    r_cell = ibuf[..., 1].reshape(-1)
+    r_pos = fbuf.reshape(-1, 3)
+    r_valid = r_src >= 0
+    # the receiver re-derives the SAME per-searcher Gumbel stream from the
+    # shipped source gid (counter-hash keyed by (chunk, gid) — DESIGN.md §2)
+    tgt, bvalid = traverse.phase_b(
+        local_tree, positions, vacant_d, r_pos,
+        jnp.where(r_valid, r_src, -2), jnp.clip(r_cell, 0, None), r_valid,
+        cfg, num_ranks, rank * n, chunk=chunk)
+    # accept/decline where the target lives (same rank — no extra comms)
+    acc, new_in = syn.accept_requests(
+        jnp.clip(tgt - rank * n, 0, n - 1), r_src, bvalid & (tgt >= 0),
+        vacant_d, in_edges, key)
+    # 9B responses retrace the request route
+    rbuf = jnp.stack([jnp.where(acc, tgt, -1),
+                      acc.astype(jnp.int32)], -1).reshape(num_ranks, cap, 2)
+    if num_ranks > 1:
+        rbuf = jax.lax.all_to_all(rbuf, axis_name, 0, 0, tiled=True)
+    resp_tgt = rbuf[d_c, s_c, 0]
+    resp_ok = (rbuf[d_c, s_c, 1] > 0) & ok
+    return resp_tgt, {"accepted": resp_ok, "in_edges": new_in}, ovf
+
+
+def formation_old(cfg, positions, local_tree, vacant_d, in_edges, gids,
+                  branch_cell, valid_a, rank, axis_name, num_ranks: int, key,
+                  chunk):
+    """Baseline: download every rank's subtree + leaf data (RMA+cache
+    endpoint), search locally, then exchange 17B formation requests.
+    Returns (tgt_gid, accepted, new_in_edges, downloaded node count)."""
+    n = cfg.neurons_per_rank
+    # ---- the download: all levels, members, positions, weights ----
+    if num_ranks > 1:
+        g_counts = tuple(jax.lax.all_gather(c, axis_name, axis=0, tiled=True)
+                         for c in local_tree.counts)
+        g_cents = tuple(jax.lax.all_gather(z, axis_name, axis=0, tiled=True)
+                        for z in local_tree.centroids)
+        members_g = jnp.where(local_tree.leaf_members >= 0,
+                              local_tree.leaf_members + rank * n, -1)
+        g_members = jax.lax.all_gather(members_g, axis_name, axis=0,
+                                       tiled=True)
+        g_pos = jax.lax.all_gather(positions, axis_name, axis=0, tiled=True)
+        g_vac = jax.lax.all_gather(vacant_d, axis_name, axis=0, tiled=True)
+    else:
+        g_counts, g_cents = local_tree.counts, local_tree.centroids
+        g_members = local_tree.leaf_members
+        g_pos, g_vac = positions, vacant_d
+    downloaded = (sum(c.shape[0] for c in g_counts) + g_pos.shape[0]) \
+        * (num_ranks - 1) / max(num_ranks, 1)
+    g_tree = ctree.LocalTree(g_counts, g_cents, g_members,
+                             jnp.zeros((), jnp.int32))
+    # ---- phase B locally for my searchers (same PRNG stream as 'new') ----
+    tgt, bvalid = traverse.phase_b(g_tree, g_pos, g_vac, positions, gids,
+                                   branch_cell, valid_a, cfg, num_ranks, 0,
+                                   chunk=chunk)
+    # ---- classic 17B formation request to the target's rank ----
+    cap = cap_requests(cfg, num_ranks)
+    dest = jnp.where(bvalid & (tgt >= 0), tgt // n, num_ranks)
+    slot = ctree.positions_within(dest, num_ranks + 1)
+    ok = (dest < num_ranks) & (slot < cap)
+    ibuf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
+    d_c = jnp.where(ok, dest, num_ranks)
+    s_c = jnp.where(ok, slot, 0)
+    ibuf = ibuf.at[d_c, s_c].set(
+        jnp.stack([jnp.where(ok, gids, -1), jnp.where(ok, tgt, -1)], -1),
+        mode="drop")
+    if num_ranks > 1:
+        ibuf = jax.lax.all_to_all(ibuf, axis_name, 0, 0, tiled=True)
+    r_src = ibuf[..., 0].reshape(-1)
+    r_tgt = ibuf[..., 1].reshape(-1)
+    r_valid = (r_src >= 0) & (r_tgt >= 0)
+    acc, new_in = syn.accept_requests(
+        jnp.clip(r_tgt - rank * n, 0, n - 1), r_src, r_valid, vacant_d,
+        in_edges, key)
+    rbuf = acc.astype(jnp.int32).reshape(num_ranks, cap)
+    if num_ranks > 1:
+        rbuf = jax.lax.all_to_all(rbuf, axis_name, 0, 0, tiled=True)
+    accepted = (rbuf[d_c, s_c] > 0) & ok
+    return tgt, accepted, new_in, jnp.asarray(downloaded, jnp.float32)

@@ -1,0 +1,144 @@
+"""Synapse-table ops: the (n, S_max) out/in edge tables and everything that
+mutates them — accept, add, retract, compact, message-driven removal.
+
+All ops are fully vectorized (segment ranks via stable sort + cumsum): the
+seed's sequential ``fori_loop`` over deletion messages and the argsort-based
+``compact`` are gone. Randomized choices (retraction, acceptance) use
+keyed per-(src,tgt) priorities so they are independent of buffer ordering —
+the property that lets two differently-routed request streams commit
+identical edge tables (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectome.tree import positions_within
+
+
+class SynapseTable(NamedTuple):
+    out_edges: jnp.ndarray   # (n, S_max) target gids, -1 empty
+    in_edges: jnp.ndarray    # (n, S_max) source gids, -1 empty
+
+
+def init_synapses(n: int, s_max: int) -> SynapseTable:
+    e = jnp.full((n, s_max), -1, jnp.int32)
+    return SynapseTable(e, e)
+
+
+def counts(edges):
+    return jnp.sum(edges >= 0, axis=1)
+
+
+def compact(edges):
+    """Push occupied slots to the front of each row (stable). A row-wise
+    cumsum gives each occupied slot its destination directly — no argsort."""
+    n, s_max = edges.shape
+    occ = edges >= 0
+    dst = jnp.cumsum(occ, axis=1) - 1
+    out = jnp.full_like(edges, -1)
+    return out.at[jnp.arange(n)[:, None],
+                  jnp.where(occ, dst, s_max)].set(edges, mode="drop")
+
+
+def edge_priority(key, a_gid, b_gid):
+    """Deterministic per-(a,b) uniform — independent of buffer ordering, so
+    the old and new algorithms make identical accept/decline choices no
+    matter how requests were routed."""
+    k = jax.vmap(lambda a, b: jax.random.fold_in(jax.random.fold_in(key, a),
+                                                 b))(a_gid, b_gid)
+    return jax.vmap(lambda kk: jax.random.uniform(kk))(k)
+
+
+def accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key):
+    """Targets accept as many requests as they have vacant dendritic elements
+    (random subset — paper §III-A(c)); accepted requests are written into
+    in_edges (assumed compacted). Returns (accept (Q,) bool, new in_edges)."""
+    n, s_max = in_edges.shape
+    q = tgt_lid.shape[0]
+    lid = jnp.where(valid, tgt_lid, n)                  # bucket n = invalid
+    # acceptance rank within each target by keyed (src,tgt) priority —
+    # ordering-independent (paper: 'accept ... randomly')
+    prio = edge_priority(key, jnp.where(valid, src_gid, 0),
+                         jnp.where(valid, lid, 0))
+    order = jnp.lexsort((prio, lid))
+    rank_p = positions_within(lid[order], n + 1)
+    rank_in_tgt = jnp.zeros((q,), jnp.int32).at[order].set(rank_p)
+    lid_c = jnp.clip(lid, 0, n - 1)
+    base = counts(in_edges)
+    free = s_max - base
+    cap = jnp.minimum(jnp.floor(jnp.where(valid, vacant_d[lid_c], 0.0)),
+                      free[lid_c].astype(jnp.float32))
+    accept = valid & (rank_in_tgt < cap)
+    slot = jnp.where(accept, base[lid_c] + rank_in_tgt, s_max)
+    new_in = in_edges.at[lid_c, jnp.clip(slot, 0, s_max)].set(
+        jnp.where(accept, src_gid, in_edges[lid_c, jnp.clip(slot, 0, s_max - 1)]),
+        mode="drop")
+    return accept, new_in
+
+
+def add_out_edges(out_edges, tgt_gid, accept):
+    """Write accepted targets into the source neurons' out-edge tables.
+    tgt_gid/accept: (n_sources,) — one pending request per source neuron."""
+    n, s_max = out_edges.shape
+    base = counts(out_edges)
+    slot = jnp.where(accept & (base < s_max), base, s_max)
+    return out_edges.at[jnp.arange(n), slot].set(
+        jnp.where(accept, tgt_gid, -1), mode="drop")
+
+
+def retract_synapses(key, edges, n_delete, row_gids):
+    """Randomly break ``n_delete[i]`` bound synapses of neuron i (paper: 'one
+    is chosen randomly'). Priority is keyed by (row gid, edge gid) so the
+    choice is independent of slot ordering. Returns (new_edges, kill mask)."""
+    n, s_max = edges.shape
+    occupied = edges >= 0
+    flat_prio = edge_priority(
+        key, jnp.broadcast_to(row_gids[:, None], edges.shape).reshape(-1),
+        jnp.where(occupied, edges, 0).reshape(-1))
+    prio = jnp.where(occupied, flat_prio.reshape(edges.shape), 2.0)
+    order = jnp.argsort(prio, axis=1)                   # occupied first, random
+    ranks = jnp.zeros_like(edges).at[
+        jnp.arange(n)[:, None], order].set(jnp.arange(s_max)[None, :])
+    kill = occupied & (ranks < n_delete[:, None])
+    return jnp.where(kill, -1, edges), kill
+
+
+def remove_edges_by_messages(edges, msg_lid, msg_gid, msg_valid):
+    """Remove one occurrence of msg_gid from row msg_lid per message,
+    earliest slots first — exactly the sequential drain semantics (each
+    message removes the then-first matching slot), but computed in one
+    vectorized pass: messages and edge slots are lex-sorted into
+    (row, value) groups with messages leading, and an edge slot dies iff
+    its occurrence rank within the group is below the group's message
+    count (segment ranks via cummax/cumsum)."""
+    n, s_max = edges.shape
+    q = msg_lid.shape[0]
+    e_flat = edges.reshape(-1)
+    e_idx = jnp.arange(n * s_max, dtype=jnp.int32)
+    # invalid messages bucket at row n, empty slots at row n+1: past every
+    # real row, so neither can join a live (row, value) group
+    rows = jnp.concatenate([
+        jnp.where(msg_valid, msg_lid, n).astype(jnp.int32),
+        jnp.where(e_flat >= 0, e_idx // s_max, n + 1)])
+    vals = jnp.concatenate([msg_gid.astype(jnp.int32), e_flat])
+    is_edge = jnp.concatenate([jnp.zeros((q,), bool),
+                               jnp.ones((n * s_max,), bool)])
+    slot = jnp.concatenate([jnp.zeros((q,), jnp.int32), e_idx % s_max])
+    # (row, value, messages-first, slot order) — stable groups
+    order = jnp.lexsort((slot, is_edge.astype(jnp.int32), vals, rows))
+    r_s, v_s, e_s = rows[order], vals[order], is_edge[order]
+    k = jnp.arange(rows.shape[0])
+    newgrp = (k == 0) | (r_s != jnp.roll(r_s, 1)) | (v_s != jnp.roll(v_s, 1))
+    start = jax.lax.cummax(jnp.where(newgrp, k, 0))
+    is_msg = (~e_s).astype(jnp.int32)
+    mcum = jnp.cumsum(is_msg)                 # inclusive message prefix count
+    # messages precede edges inside a group, so for an edge item the group's
+    # full message count has already accumulated by its position
+    m_group = mcum - (mcum[start] - is_msg[start])
+    occ_rank = (k - start) - m_group
+    kill_sorted = e_s & (occ_rank < m_group)
+    kill = jnp.zeros((q + n * s_max,), bool).at[order].set(kill_sorted)
+    return jnp.where(kill[q:].reshape(n, s_max), -1, edges)

@@ -1,0 +1,352 @@
+"""Vectorized Barnes-Hut partner search (paper §III-B0c / §IV-A).
+
+The paper's recursive search — collect nodes meeting the acceptance criterion
+(cell_size / distance < theta), sample one by connection probability, restart
+inside it if it is an inner node — is reformulated level-synchronously for the
+TPU: a static-size frontier per searching neuron is expanded in lockstep
+(rejected nodes are replaced by their 8 children), then one Gumbel-max sample
+selects the target; sampling an inner node restarts the expansion from it.
+
+Static-shape deviations (documented in DESIGN.md §2/§6): the frontier is
+capped at F entries — parents whose children would overflow are kept as
+sampling candidates at coarser granularity; overflow is counted and reported
+by tests.
+
+PRNG contract: every Gumbel draw comes from the counter-based Threefry hash
+(kernels/hash.py) keyed by ``(seed, BH_DOMAIN, bh_ctr(chunk, round, draw),
+source_gid)`` — pure integers, no key arrays. Because the *same* stream is
+derived from the source gid wherever the search executes — locally after
+downloading remote subtrees (old algorithm), on the owning rank (new
+location-aware algorithm), in the jnp reference path, or inside the Pallas
+traversal kernel (kernels/bh_traverse.py) — all four make bit-identical
+choices. Round slots: phase A expands from round 0, phase B from
+``PHASE_B_ROUND_BASE``, member selection uses the last round.
+
+Distances use the ``bh_gauss`` MXU identity |x|^2+|y|^2-2<x,y> with the
+coordinate axis zero-padded to 8 lanes (``pairwise_d2``) so the kernel's
+systolic-array mapping and the reference see identical floats.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import morton
+from repro.kernels import hash as chash
+
+NEG = -1e30
+PAD = 8   # coordinate lanes (3 -> 8), the bh_gauss MXU alignment
+
+PHASE_A_ROUND_BASE = 0
+PHASE_B_ROUND_BASE = 16
+MEMBER_ROUND = chash.BH_ROUNDS - 1
+
+
+class StackedTree(NamedTuple):
+    """Uniform view of consecutive octree levels for traced indexing.
+    counts: (L, C_max); centroids: (L, C_max, 3); sizes: STATIC tuple of L
+    cell edge lengths (compile-time floats, so the Pallas kernel body closes
+    over them instead of capturing a constant array).
+    Level k covers absolute octree level (start_level + k); cell indices are
+    relative to ``cell_base * 8^k`` (the owning subtree block)."""
+    counts: jnp.ndarray
+    centroids: jnp.ndarray
+    sizes: tuple
+    start_level: int
+
+
+def stack_levels(counts_tuple, cents_tuple, start_level: int) -> StackedTree:
+    lmax = max(c.shape[0] for c in counts_tuple)
+    cs, zs = [], []
+    for c, z in zip(counts_tuple, cents_tuple):
+        pad = lmax - c.shape[0]
+        cs.append(jnp.pad(c, (0, pad)))
+        zs.append(jnp.pad(z, ((0, pad), (0, 0))))
+    sizes = level_sizes(len(counts_tuple), start_level)
+    return StackedTree(jnp.stack(cs), jnp.stack(zs), sizes, start_level)
+
+
+def level_sizes(n_levels: int, start_level: int):
+    """Static per-level cell edge lengths (the kernel takes these as a
+    compile-time tuple)."""
+    return tuple(morton.cell_size(start_level + k) for k in range(n_levels))
+
+
+def _gauss(d2, sigma: float):
+    return jnp.exp(-d2 / (sigma * sigma))
+
+
+def _pad_lanes(x):
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, PAD - x.shape[-1])])
+
+
+def pairwise_d2(x, y):
+    """||x - y||^2 for x: (Q, 3) against y: (Q, K, 3), via the MXU identity
+    |x|^2 + |y|^2 - 2<x,y> with the coordinate axis zero-padded to 8 lanes —
+    the same systolic-array mapping as kernels/bh_gauss.py, shared by the
+    Pallas traversal kernel and the jnp reference so both see identical
+    floats (precision caveat for tiny sigma documented in bh_gauss)."""
+    xp = _pad_lanes(x.astype(jnp.float32))
+    yp = _pad_lanes(y.astype(jnp.float32))
+    xx = jnp.sum(xp * xp, axis=-1)[:, None]
+    yy = jnp.sum(yp * yp, axis=-1)
+    xy = jax.lax.dot_general(xp, yp, (((1,), (2,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    return jnp.maximum(xx + yy - 2.0 * xy, 0.0)
+
+
+def _level_size_at(sizes, lvl_rel):
+    """Per-entry cell edge length from the STATIC per-level tuple — a chain
+    of scalar selects instead of a constant-array gather (Pallas kernel
+    bodies may not capture constant arrays)."""
+    out = jnp.full(lvl_rel.shape, jnp.float32(sizes[0]))
+    for k in range(1, len(sizes)):
+        out = jnp.where(lvl_rel == k, jnp.float32(sizes[k]), out)
+    return out
+
+
+def _node_stats(tree: StackedTree, lvl_rel, cell, x, sigma):
+    """Vectorized gather of (count, prob-weight, size/dist) for entries.
+    lvl_rel, cell: (Q, F) int; x: (Q, 3)."""
+    cnt = tree.counts[lvl_rel, cell]
+    cent = tree.centroids[lvl_rel, cell]
+    center = cent / jnp.maximum(cnt, 1e-9)[..., None]
+    d2 = pairwise_d2(x, center)
+    size = _level_size_at(tree.sizes, lvl_rel)
+    crit = size / jnp.sqrt(jnp.maximum(d2, 1e-12))
+    prob = cnt * _gauss(d2, sigma)
+    return cnt, prob, crit
+
+
+def _check_caps(frontier: int, round_base: int, restarts: int):
+    if frontier > chash.BH_DRAWS:
+        raise ValueError(f"frontier_cap {frontier} exceeds the PRNG draw "
+                         f"window ({chash.BH_DRAWS})")
+    if round_base + restarts > MEMBER_ROUND:
+        raise ValueError(f"{restarts} restarts from round base {round_base} "
+                         f"would collide with the member-selection round")
+
+
+def expand_and_sample(tree: StackedTree, x, root_cell, root_rel, src_gid, rnd,
+                      *, seed: int, chunk, theta: float, sigma: float,
+                      frontier: int, n_levels: int):
+    """One paper 'round': expand from the root node until every frontier entry
+    meets the acceptance criterion (or is a deepest-level cell), then sample.
+
+    x: (Q, 3); root_cell/root_rel: (Q,) current node (relative level index);
+    src_gid: (Q,) searcher gids keying the Gumbel stream; rnd: scalar round
+    index. Returns (cell, rel_level, valid, overflowed): all (Q,).
+    """
+    q = x.shape[0]
+    f = frontier
+    last = n_levels - 1
+
+    # init: children of root (or root itself if already deepest)
+    at_leaf = root_rel >= last
+    child_rel = jnp.where(at_leaf, root_rel, root_rel + 1)
+    base8 = jnp.where(at_leaf, root_cell, root_cell * 8)
+    cells0 = jnp.full((q, f), 0, jnp.int32)
+    lvls0 = jnp.full((q, f), 0, jnp.int32)
+    valid0 = jnp.zeros((q, f), bool)
+    js = jnp.arange(8)
+    cells0 = cells0.at[:, :8].set(base8[:, None] + jnp.where(
+        at_leaf[:, None], 0, js[None, :]))
+    lvls0 = lvls0.at[:, :8].set(child_rel[:, None])
+    valid0 = valid0.at[:, :8].set(jnp.where(at_leaf[:, None], js[None] == 0,
+                                            True))
+    overflow0 = jnp.zeros((q,), bool)
+
+    def round_fn(state, _):
+        cells, lvls, valid, overflow = state
+        cnt, prob, crit = _node_stats(tree, lvls, cells, x, sigma)
+        nonempty = cnt > 1e-9
+        accepted = (crit < theta) | (lvls >= last)
+        expand = valid & nonempty & ~accepted
+        keepers = valid & ~expand & nonempty
+        need = jnp.where(expand, 8, jnp.where(keepers, 1, 0))
+        off = jnp.cumsum(need, axis=1) - need
+        fits = (off + need) <= f
+        # pass 2: overflowing expanders retained as coarse candidates
+        need2 = jnp.where(expand & fits, 8, jnp.where(
+            (keepers | (expand & ~fits)), 1, 0))
+        off2 = jnp.cumsum(need2, axis=1) - need2
+        fits2 = (off2 + need2) <= f
+        ncells = jnp.zeros((q, f), jnp.int32)
+        nlvls = jnp.zeros((q, f), jnp.int32)
+        nvalid = jnp.zeros((q, f), bool)
+        qi = jnp.arange(q)[:, None]
+        # singles
+        single = (need2 == 1) & fits2
+        tgt = jnp.where(single, off2, f)
+        ncells = ncells.at[qi, tgt].set(cells, mode="drop")
+        nlvls = nlvls.at[qi, tgt].set(lvls, mode="drop")
+        nvalid = nvalid.at[qi, tgt].set(single, mode="drop")
+        # expansions
+        exp8 = (need2 == 8) & fits2
+        qij = jnp.arange(q)[:, None, None]
+        tgt8 = jnp.where(exp8[..., None], off2[..., None] + js, f)
+        ncells = ncells.at[qij, tgt8].set(cells[..., None] * 8 + js,
+                                          mode="drop")
+        nlvls = nlvls.at[qij, tgt8].set((lvls + 1)[..., None]
+                                        * jnp.ones_like(js), mode="drop")
+        nvalid = nvalid.at[qij, tgt8].set(exp8[..., None] & jnp.ones_like(
+            js, bool), mode="drop")
+        overflow = overflow | jnp.any(expand & ~fits2, axis=1)
+        return (ncells, nlvls, nvalid, overflow), None
+
+    state = (cells0, lvls0, valid0, overflow0)
+    state, _ = jax.lax.scan(round_fn, state, None, length=n_levels)
+    cells, lvls, valid, overflow = state
+
+    cnt, prob, _ = _node_stats(tree, lvls, cells, x, sigma)
+    logits = jnp.where(valid & (cnt > 1e-9), jnp.log(jnp.maximum(prob, 1e-30)),
+                       NEG)
+    g = chash.gumbel(seed, chash.BH_DOMAIN,
+                     chash.bh_ctr(chunk, rnd, jnp.arange(f))[None, :],
+                     src_gid[:, None])
+    pick = jnp.argmax(logits + g, axis=1)
+    qi = jnp.arange(q)
+    any_valid = jnp.any(logits > NEG / 2, axis=1)
+    return (cells[qi, pick], lvls[qi, pick], any_valid, overflow)
+
+
+def bh_search(tree: StackedTree, x, src_gid, start_cell, *, seed: int, chunk,
+              theta, sigma, frontier, n_levels, round_base=0,
+              max_restarts=None):
+    """Full search: expand/sample, restarting inside sampled inner nodes until
+    a deepest-level cell is returned (paper's 'process restarts' loop).
+
+    x: (Q,3); src_gid: (Q,) searcher gids (PRNG entities); start_cell: (Q,)
+    cell at tree level 0. Returns (leaf_cell (Q,), valid (Q,), overflow (Q,)).
+    """
+    q = x.shape[0]
+    last = n_levels - 1
+    restarts = max_restarts or n_levels
+    _check_caps(frontier, round_base, restarts)
+
+    def body(i, st):
+        cell, rel, valid, done, overflow = st
+        ncell, nrel, nvalid, noverf = expand_and_sample(
+            tree, x, cell, rel, src_gid, round_base + i, seed=seed,
+            chunk=chunk, theta=theta, sigma=sigma, frontier=frontier,
+            n_levels=n_levels)
+        # keep previous result where already done
+        cell = jnp.where(done, cell, ncell)
+        rel = jnp.where(done, rel, nrel)
+        valid = jnp.where(done, valid, nvalid)
+        overflow = overflow | jnp.where(done, False, noverf)
+        done = done | (rel >= last) | ~valid
+        return (cell, rel, valid, done, overflow)
+
+    st = (start_cell.astype(jnp.int32), jnp.zeros((q,), jnp.int32),
+          jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), bool))
+    cell, rel, valid, done, overflow = jax.lax.fori_loop(0, restarts, body, st)
+    valid = valid & (rel >= last)
+    return cell, valid, overflow
+
+
+def select_member(x, member_pos, member_weight, member_valid, src_gid, *,
+                  seed: int, chunk, sigma):
+    """Pick an actual neuron within the chosen leaf cell, kernel-weighted
+    (paper: 'the new partner must be a genuine neuron').
+    member_*: (Q, M, ...). Returns (idx (Q,), valid (Q,))."""
+    m = member_pos.shape[1]
+    if m > chash.BH_DRAWS:
+        raise ValueError(f"members_cap {m} exceeds the PRNG draw window "
+                         f"({chash.BH_DRAWS})")
+    d2 = pairwise_d2(x, member_pos)
+    w = member_weight * _gauss(d2, sigma)
+    logits = jnp.where(member_valid & (w > 1e-12),
+                       jnp.log(jnp.maximum(w, 1e-30)), NEG)
+    g = chash.gumbel(seed, chash.BH_DOMAIN,
+                     chash.bh_ctr(chunk, MEMBER_ROUND, jnp.arange(m))[None, :],
+                     src_gid[:, None])
+    pick = jnp.argmax(logits + g, axis=1)
+    valid = jnp.any(logits > NEG / 2, axis=1)
+    return pick, valid
+
+
+# ---------------------------------------------------------------- phase A
+def phase_a(top, pos, src_gid, cfg, num_ranks: int, *, chunk):
+    """Search the replicated tree down to the branch level. pos: (Q,3);
+    src_gid: (Q,). Returns (branch_cell (Q,), valid (Q,))."""
+    b = morton.branch_level(num_ranks)
+    if b == 0:
+        q = pos.shape[0]
+        return jnp.zeros((q,), jnp.int32), jnp.ones((q,), bool)
+    tree = stack_levels(top.counts, top.centroids, 0)
+    cell, valid, _ = bh_search(
+        tree, pos, src_gid, jnp.zeros((pos.shape[0],), jnp.int32),
+        seed=cfg.seed, chunk=chunk, theta=cfg.theta, sigma=cfg.sigma,
+        frontier=cfg.frontier_cap, n_levels=b + 1,
+        round_base=PHASE_A_ROUND_BASE)
+    return cell, valid
+
+
+# ---------------------------------------------------------------- phase B
+def phase_b_core(counts, cents, leaf_members, neuron_pos, vacant_d, x,
+                 start_cell_rel, src_gid, valid_in, chunk, gid_base, *,
+                 seed: int, sizes, theta: float, sigma: float, frontier: int,
+                 n_levels: int):
+    """Finish the search inside one rank's subtree, raw stacked arrays — the
+    single source of truth executed by the Pallas traversal kernel body
+    (kernels/bh_traverse.py) and the jnp reference path, which is what makes
+    ``connectivity_impl='fused'`` bit-identical to ``'reference'``. Every
+    operation is row-independent over Q, so the kernel's query blocking
+    cannot change results.
+
+    counts: (L, C); cents: (L, C, 3); sizes: static tuple of per-level cell
+    edge lengths; leaf_members: (n_leaf, M); neuron_pos/vacant_d: the
+    subtree's neuron data; x/start_cell_rel/src_gid/valid_in: (Q, ...)
+    queries; chunk/gid_base: traced i32 scalars.
+    Returns (target_gid (Q,), valid (Q,))."""
+    tree = StackedTree(counts, cents, tuple(sizes), 0)
+    leaf_cell, valid, _ = bh_search(
+        tree, x, src_gid, start_cell_rel, seed=seed, chunk=chunk, theta=theta,
+        sigma=sigma, frontier=frontier, n_levels=n_levels,
+        round_base=PHASE_B_ROUND_BASE)
+    valid = valid & valid_in
+    members = leaf_members[leaf_cell]                  # (Q, M) local ids
+    mvalid = members >= 0
+    msafe = jnp.where(mvalid, members, 0)
+    mgid = gid_base + msafe
+    # exclude self-connection (a neuron never proposes to itself)
+    mvalid = mvalid & (mgid != src_gid[:, None])
+    mpos = neuron_pos[msafe]
+    mw = jnp.where(mvalid, vacant_d[msafe], 0.0)
+    pick, pvalid = select_member(x, mpos, mw, mvalid, src_gid, seed=seed,
+                                 chunk=chunk, sigma=sigma)
+    tgt_local = jnp.take_along_axis(msafe, pick[:, None], axis=1)[:, 0]
+    tgt_gid = gid_base + tgt_local
+    ok = valid & pvalid
+    return jnp.where(ok, tgt_gid, -1), ok
+
+
+def phase_b(local, neuron_pos, vacant_d, pos, src_gid, start_cell_rel,
+            valid_in, cfg, num_ranks: int, gid_base, *, chunk,
+            interpret=None):
+    """Phase-B dispatch per ``cfg.connectivity_impl``:
+
+      'reference'  the jnp ``phase_b_core`` over the full query batch;
+      'fused'      the Pallas traversal kernel (kernels/bh_traverse.py),
+                   query-blocked, same core math — bit-identical.
+
+    local: a tree.LocalTree (or the gathered global tree in the old
+    algorithm, with gid_base = 0 and global leaf members)."""
+    b = morton.branch_level(num_ranks)
+    stacked = stack_levels(local.counts, local.centroids, b)
+    kw = dict(seed=cfg.seed, sizes=stacked.sizes, theta=cfg.theta,
+              sigma=cfg.sigma, frontier=cfg.frontier_cap,
+              n_levels=cfg.local_levels + 1)
+    if cfg.connectivity_impl == "fused":
+        from repro.kernels import ops as kops   # lazy: kernels import us
+        return kops.bh_traverse(
+            stacked.counts, stacked.centroids, local.leaf_members,
+            neuron_pos, vacant_d, pos, start_cell_rel, src_gid, valid_in,
+            chunk, gid_base, interpret=interpret, **kw)
+    return phase_b_core(stacked.counts, stacked.centroids,
+                        local.leaf_members, neuron_pos, vacant_d, pos,
+                        start_cell_rel, src_gid, valid_in, chunk, gid_base,
+                        **kw)

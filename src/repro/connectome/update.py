@@ -1,0 +1,159 @@
+"""The per-chunk connectivity update (paper phase 3), orchestrated:
+
+  3a  deletion by retraction — element loss breaks bound synapses, partners
+      are notified via routed messages and regain vacant elements;
+  3b  formation — octree build, branch-node exchange, phase-A search over
+      the replicated top tree, then the algorithm pair: 'old' downloads
+      every subtree and searches locally, 'new' ships 42B requests to the
+      owning rank (routing.py);
+  3c  rate refresh + Delta-periodic rate exchange.
+
+All scenario effects (lesion masks) apply before the algorithm branch, so
+old == new stays bit-identical under every protocol. Randomness: retraction
+and acceptance use chunk-keyed jax.random priorities (rank-independent);
+every Barnes-Hut draw uses the counter hash keyed by (chunk, source gid)
+(connectome.traverse) — both reconstructible wherever the computation runs
+(DESIGN.md §2/§6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectome import routing
+from repro.connectome import synapses as syn
+from repro.connectome import traverse
+from repro.connectome import tree as ctree
+from repro.core import morton, spikes
+from repro.core.neuron import refresh_rate
+from repro.scenarios import protocol as proto
+
+
+def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
+                        scenario=None):
+    """One structural-plasticity update. ``state`` is the engine's BrainState
+    (any NamedTuple with neurons/out_edges/in_edges/positions/rates_table/
+    chunk/stats); returns it updated with chunk advanced."""
+    if cfg.connectivity_impl not in ("reference", "fused"):
+        raise ValueError(f"unknown connectivity_impl "
+                         f"{cfg.connectivity_impl!r}; expected 'reference' "
+                         f"or 'fused'")
+    n = cfg.neurons_per_rank
+    # chunk_key is rank-independent: every rank derives the same stream, so
+    # per-(gid) sub-streams are reproducible wherever the computation runs —
+    # the property that makes old == new bit-identical (DESIGN.md §2)
+    chunk_key = jax.random.fold_in(jax.random.key(cfg.seed + 2), state.chunk)
+    gid0 = rank * n
+    gids = gid0 + jnp.arange(n, dtype=jnp.int32)
+    stats = dict(state.stats)
+
+    # lesion mask at the update instant (the step right after this chunk's
+    # activity scan). Applied BEFORE the algorithm branch so 'old' and 'new'
+    # see identical inputs — the bit-identity invariant holds per protocol.
+    events = scenario.events if scenario is not None else ()
+    alive = proto.alive_mask(events, scenario.regions, state.positions,
+                             (state.chunk + 1) * cfg.rate_period) \
+        if events else None
+    if alive is not None:
+        # dead neurons lose all synaptic elements -> full retraction below,
+        # partners are notified and regain vacant elements
+        state = state._replace(neurons=state.neurons._replace(
+            ax_elements=jnp.where(alive, state.neurons.ax_elements, 0.0),
+            de_elements=jnp.where(alive, state.neurons.de_elements, 0.0)))
+
+    # ---- deletion by retraction (phase 3a) -------------------------------
+    out_edges, in_edges = state.out_edges, state.in_edges
+    out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
+    del_out = jnp.maximum(
+        out_cnt - jnp.floor(state.neurons.ax_elements).astype(jnp.int32), 0)
+    del_in = jnp.maximum(
+        in_cnt - jnp.floor(state.neurons.de_elements).astype(jnp.int32), 0)
+    k_out, k_in, k_accept = jax.random.split(chunk_key, 3)
+    out_edges, kill_out = syn.retract_synapses(k_out, out_edges, del_out,
+                                               gids)
+    in_edges, kill_in = syn.retract_synapses(k_in, in_edges, del_in, gids)
+    stats["synapses_deleted"] = stats["synapses_deleted"] + \
+        jnp.sum(kill_out) + jnp.sum(kill_in)
+
+    # notify partners; kill masks index the PRE-retraction tables
+    lesions = proto.has_lesions(scenario)
+    msgs_out, ovf_out = routing.route_deletions(
+        kill_out, state.out_edges, gids[:, None], cfg, axis_name, num_ranks,
+        lesions)
+    msgs_in, ovf_in = routing.route_deletions(
+        kill_in, state.in_edges, gids[:, None], cfg, axis_name, num_ranks,
+        lesions)
+    # dropped notifications leave stale partner edges — surface them
+    stats["request_overflow"] = stats["request_overflow"] + ovf_out + ovf_in
+    # apply: partner of my out-edge removes its in-edge, and vice versa
+    in_edges = syn.remove_edges_by_messages(
+        in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1), msgs_out[:, 1],
+        (msgs_out[:, 0] >= gid0) & (msgs_out[:, 0] < gid0 + n))
+    out_edges = syn.remove_edges_by_messages(
+        out_edges, jnp.clip(msgs_in[:, 0] - gid0, 0, n - 1), msgs_in[:, 1],
+        (msgs_in[:, 0] >= gid0) & (msgs_in[:, 0] < gid0 + n))
+    out_edges, in_edges = syn.compact(out_edges), syn.compact(in_edges)
+
+    # ---- formation (phase 3b) --------------------------------------------
+    out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
+    vac_a = jnp.floor(state.neurons.ax_elements).astype(jnp.int32) - out_cnt
+    vac_d = state.neurons.de_elements - in_cnt.astype(jnp.float32)
+    vac_d_pos = jnp.maximum(vac_d, 0.0)
+
+    local_tree = ctree.build_local_tree(state.positions, vac_d_pos, rank,
+                                        cfg, num_ranks)
+    top = ctree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
+
+    searching = vac_a >= 1
+    if alive is not None:
+        # dead neurons neither search for partners nor offer vacancies
+        searching = searching & alive
+        vac_d_pos = jnp.where(alive, vac_d_pos, 0.0)
+    branch_cell, valid_a = traverse.phase_a(top, state.positions, gids, cfg,
+                                            num_ranks, chunk=state.chunk)
+    valid_a = valid_a & searching
+    c_per = morton.cells_per_rank(num_ranks)
+    owner = jnp.clip(branch_cell // c_per, 0, num_ranks - 1)
+    start_rel = branch_cell - owner * c_per
+    stats["bh_requests"] = stats["bh_requests"] + jnp.sum(valid_a)
+    # either algorithm sends one formation request per valid searcher (17 B
+    # plain / 42 B formation-and-calculation — Tables I/II accounting)
+    stats["formation_requests"] = stats["formation_requests"] + jnp.sum(
+        valid_a)
+
+    if cfg.connectivity_alg == "new":
+        tgt_gid, accept, ovf = routing.formation_new(
+            cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
+            branch_cell, owner, start_rel, valid_a, rank, axis_name,
+            num_ranks, k_accept, state.chunk)
+        in_edges_new = accept.pop("in_edges")
+        stats["request_overflow"] = stats["request_overflow"] + ovf
+        stats["bh_responses"] = stats["bh_responses"] + jnp.sum(
+            accept["accepted"])
+        out_edges = syn.add_out_edges(out_edges, tgt_gid, accept["accepted"])
+        in_edges = in_edges_new
+        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(
+            accept["accepted"])
+    else:
+        tgt_gid, accepted, new_in, downloaded = routing.formation_old(
+            cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
+            branch_cell, valid_a, rank, axis_name, num_ranks, k_accept,
+            state.chunk)
+        out_edges = syn.add_out_edges(out_edges, tgt_gid, accepted)
+        in_edges = new_in
+        stats["tree_nodes_downloaded"] = stats["tree_nodes_downloaded"] \
+            + downloaded
+        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
+
+    neurons = refresh_rate(state.neurons, cfg, alive)
+    if cfg.spike_alg == "old":
+        # the rates table is dead state on the old spike path — skip the
+        # per-chunk all-gather (and its accounting) entirely
+        rates_table = state.rates_table
+    else:
+        rates_table = spikes.exchange_rates(neurons.rate, axis_name,
+                                            num_ranks)
+        stats["rates_sent"] = stats["rates_sent"] + float(n)
+    return state._replace(neurons=neurons, out_edges=out_edges,
+                          in_edges=in_edges, rates_table=rates_table,
+                          chunk=state.chunk + 1, stats=stats)

@@ -1,5 +1,8 @@
 # The paper's primary contribution: MSP structural-plasticity simulation with
 # the location-aware Barnes-Hut connectivity update ("move computation instead
 # of data") and the Delta-periodic firing-rate spike approximation.
-from repro.core import (barnes_hut, connectivity, engine, morton, neuron,
-                        octree, spikes)
+#
+# Submodules are imported on demand (`from repro.core import engine`), not
+# eagerly: the connectivity update lives in repro.connectome (PR 3) and the
+# compat shims here (barnes_hut/connectivity/octree) import back from it —
+# eager imports would make package initialization order-dependent.

@@ -1,197 +1,13 @@
-"""Vectorized Barnes-Hut partner search (paper §III-B0c / §IV-A).
+"""Compat shim — the Barnes-Hut search moved to ``repro.connectome.traverse``
+(PR 3: the connectome subsystem owns the whole connectivity update; the
+randomness contract changed from fold_in key chains to the counter-based
+Threefry hash keyed by (seed, chunk, source_gid, round, draw)). This module
+re-exports the public surface so existing imports keep working."""
+from repro.connectome.traverse import (NEG, StackedTree, _gauss, bh_search,
+                                       expand_and_sample, pairwise_d2,
+                                       phase_a, phase_b, phase_b_core,
+                                       select_member, stack_levels)
 
-The paper's recursive search — collect nodes meeting the acceptance criterion
-(cell_size / distance < theta), sample one by connection probability, restart
-inside it if it is an inner node — is reformulated level-synchronously for the
-TPU: a static-size frontier per searching neuron is expanded in lockstep
-(rejected nodes are replaced by their 8 children), then one Gumbel-max sample
-selects the target; sampling an inner node restarts the expansion from it.
-
-Static-shape deviations (documented in DESIGN.md §2): the frontier is capped at
-F entries — parents whose children would overflow are kept as sampling
-candidates at coarser granularity; overflow is counted and reported by tests.
-
-Randomness is a keyed stream: fold_in(key, source_gid, restart_round). Because
-the *same* stream is used whether the search continues locally (old algorithm,
-after downloading remote subtrees) or on the owning rank (new location-aware
-algorithm), both algorithms make bit-identical choices — stronger than the
-paper, which only argues qualitative equivalence.
-"""
-from __future__ import annotations
-
-import math
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import morton
-
-NEG = -1e30
-
-
-class StackedTree(NamedTuple):
-    """Uniform view of consecutive octree levels for traced indexing.
-    counts: (L, C_max); centroids: (L, C_max, 3); sizes: (L,) cell edge len.
-    Level k covers absolute octree level (start_level + k); cell indices are
-    relative to ``cell_base * 8^k`` (the owning subtree block)."""
-    counts: jnp.ndarray
-    centroids: jnp.ndarray
-    sizes: jnp.ndarray
-    start_level: int
-
-
-def stack_levels(counts_tuple, cents_tuple, start_level: int) -> StackedTree:
-    lmax = max(c.shape[0] for c in counts_tuple)
-    cs, zs = [], []
-    for c, z in zip(counts_tuple, cents_tuple):
-        pad = lmax - c.shape[0]
-        cs.append(jnp.pad(c, (0, pad)))
-        zs.append(jnp.pad(z, ((0, pad), (0, 0))))
-    sizes = jnp.asarray([morton.cell_size(start_level + k)
-                         for k in range(len(counts_tuple))], jnp.float32)
-    return StackedTree(jnp.stack(cs), jnp.stack(zs), sizes, start_level)
-
-
-def _gauss(d2, sigma: float):
-    return jnp.exp(-d2 / (sigma * sigma))
-
-
-def _node_stats(tree: StackedTree, lvl_rel, cell, x, sigma):
-    """Vectorized gather of (count, prob-weight, size/dist) for entries.
-    lvl_rel, cell: (...,) int; x: (..., 3)."""
-    cnt = tree.counts[lvl_rel, cell]
-    cent = tree.centroids[lvl_rel, cell]
-    center = cent / jnp.maximum(cnt, 1e-9)[..., None]
-    d2 = jnp.sum(jnp.square(x - center), axis=-1)
-    size = tree.sizes[lvl_rel]
-    crit = size / jnp.sqrt(jnp.maximum(d2, 1e-12))
-    prob = cnt * _gauss(d2, sigma)
-    return cnt, prob, crit
-
-
-def expand_and_sample(tree: StackedTree, x, root_cell, root_rel, key,
-                      *, theta: float, sigma: float, frontier: int,
-                      n_levels: int):
-    """One paper 'round': expand from the root node until every frontier entry
-    meets the acceptance criterion (or is a deepest-level cell), then sample.
-
-    x: (Q, 3); root_cell/root_rel: (Q,) current node (relative level index).
-    Returns (cell, rel_level, valid, overflowed): all (Q,).
-    """
-    q = x.shape[0]
-    f = frontier
-    last = n_levels - 1
-
-    # init: children of root (or root itself if already deepest)
-    at_leaf = root_rel >= last
-    child_rel = jnp.where(at_leaf, root_rel, root_rel + 1)
-    base8 = jnp.where(at_leaf, root_cell, root_cell * 8)
-    cells0 = jnp.full((q, f), 0, jnp.int32)
-    lvls0 = jnp.full((q, f), 0, jnp.int32)
-    valid0 = jnp.zeros((q, f), bool)
-    js = jnp.arange(8)
-    cells0 = cells0.at[:, :8].set(base8[:, None] + jnp.where(
-        at_leaf[:, None], 0, js[None, :]))
-    lvls0 = lvls0.at[:, :8].set(child_rel[:, None])
-    valid0 = valid0.at[:, :8].set(jnp.where(at_leaf[:, None], js[None] == 0,
-                                            True))
-    overflow0 = jnp.zeros((q,), bool)
-
-    def round_fn(state, _):
-        cells, lvls, valid, overflow = state
-        cnt, prob, crit = _node_stats(tree, lvls, cells, x[:, None, :], sigma)
-        nonempty = cnt > 1e-9
-        accepted = (crit < theta) | (lvls >= last)
-        expand = valid & nonempty & ~accepted
-        keepers = valid & ~expand & nonempty
-        need = jnp.where(expand, 8, jnp.where(keepers, 1, 0))
-        off = jnp.cumsum(need, axis=1) - need
-        fits = (off + need) <= f
-        # pass 2: overflowing expanders retained as coarse candidates
-        need2 = jnp.where(expand & fits, 8, jnp.where(
-            (keepers | (expand & ~fits)), 1, 0))
-        off2 = jnp.cumsum(need2, axis=1) - need2
-        fits2 = (off2 + need2) <= f
-        ncells = jnp.zeros((q, f), jnp.int32)
-        nlvls = jnp.zeros((q, f), jnp.int32)
-        nvalid = jnp.zeros((q, f), bool)
-        qi = jnp.arange(q)[:, None]
-        # singles
-        single = (need2 == 1) & fits2
-        tgt = jnp.where(single, off2, f)
-        ncells = ncells.at[qi, tgt].set(cells, mode="drop")
-        nlvls = nlvls.at[qi, tgt].set(lvls, mode="drop")
-        nvalid = nvalid.at[qi, tgt].set(single, mode="drop")
-        # expansions
-        exp8 = (need2 == 8) & fits2
-        qij = jnp.arange(q)[:, None, None]
-        tgt8 = jnp.where(exp8[..., None], off2[..., None] + js, f)
-        ncells = ncells.at[qij, tgt8].set(cells[..., None] * 8 + js,
-                                          mode="drop")
-        nlvls = nlvls.at[qij, tgt8].set((lvls + 1)[..., None]
-                                        * jnp.ones_like(js), mode="drop")
-        nvalid = nvalid.at[qij, tgt8].set(exp8[..., None] & jnp.ones_like(
-            js, bool), mode="drop")
-        overflow = overflow | jnp.any(expand & ~fits2, axis=1)
-        return (ncells, nlvls, nvalid, overflow), None
-
-    state = (cells0, lvls0, valid0, overflow0)
-    state, _ = jax.lax.scan(round_fn, state, None, length=n_levels)
-    cells, lvls, valid, overflow = state
-
-    cnt, prob, _ = _node_stats(tree, lvls, cells, x[:, None, :], sigma)
-    logits = jnp.where(valid & (cnt > 1e-9), jnp.log(jnp.maximum(prob, 1e-30)),
-                       NEG)
-    g = jax.vmap(lambda k: jax.random.gumbel(k, (f,)))(key)  # per-query keys
-    pick = jnp.argmax(logits + g, axis=1)
-    qi = jnp.arange(q)
-    any_valid = jnp.any(logits > NEG / 2, axis=1)
-    return (cells[qi, pick], lvls[qi, pick], any_valid, overflow)
-
-
-def bh_search(tree: StackedTree, x, keys, start_cell, *, theta, sigma,
-              frontier, n_levels, max_restarts=None):
-    """Full search: expand/sample, restarting inside sampled inner nodes until
-    a deepest-level cell is returned (paper's 'process restarts' loop).
-
-    x: (Q,3); keys: (Q,) PRNG keys; start_cell: (Q,) cell at tree level 0.
-    Returns (leaf_cell (Q,), valid (Q,), overflow (Q,))."""
-    q = x.shape[0]
-    last = n_levels - 1
-    restarts = max_restarts or n_levels
-
-    def body(i, st):
-        cell, rel, valid, done, overflow = st
-        kk = jax.vmap(lambda k: jax.random.fold_in(k, i))(keys)
-        ncell, nrel, nvalid, noverf = expand_and_sample(
-            tree, x, cell, rel, kk, theta=theta,
-            sigma=sigma, frontier=frontier, n_levels=n_levels)
-        # keep previous result where already done
-        cell = jnp.where(done, cell, ncell)
-        rel = jnp.where(done, rel, nrel)
-        valid = jnp.where(done, valid, nvalid)
-        overflow = overflow | jnp.where(done, False, noverf)
-        done = done | (rel >= last) | ~valid
-        return (cell, rel, valid, done, overflow)
-
-    st = (start_cell.astype(jnp.int32), jnp.zeros((q,), jnp.int32),
-          jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), bool))
-    cell, rel, valid, done, overflow = jax.lax.fori_loop(0, restarts, body, st)
-    valid = valid & (rel >= last)
-    return cell, valid, overflow
-
-
-def select_member(key, x, member_pos, member_weight, member_valid, sigma):
-    """Pick an actual neuron within the chosen leaf cell, kernel-weighted
-    (paper: 'the new partner must be a genuine neuron').
-    member_*: (Q, M, ...). Returns (idx (Q,), valid (Q,))."""
-    d2 = jnp.sum(jnp.square(x[:, None, :] - member_pos), axis=-1)
-    w = member_weight * _gauss(d2, sigma)
-    logits = jnp.where(member_valid & (w > 1e-12),
-                       jnp.log(jnp.maximum(w, 1e-30)), NEG)
-    m = logits.shape[1]
-    g = jax.vmap(lambda k: jax.random.gumbel(k, (m,)))(key)  # per-query keys
-    pick = jnp.argmax(logits + g, axis=1)
-    valid = jnp.any(logits > NEG / 2, axis=1)
-    return pick, valid
+__all__ = ["NEG", "StackedTree", "bh_search", "expand_and_sample",
+           "pairwise_d2", "phase_a", "phase_b", "phase_b_core",
+           "select_member", "stack_levels"]

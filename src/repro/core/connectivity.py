@@ -1,177 +1,21 @@
-"""MSP phase 3: connectivity update — the paper's core contribution.
+"""Compat shim — the connectivity update moved to ``repro.connectome`` (PR 3):
+synapse-table ops in ``connectome.synapses``, the phase-A/B search in
+``connectome.traverse``, request routing in ``connectome.routing``, and the
+per-chunk orchestration in ``connectome.update``. This module re-exports the
+public surface so existing imports keep working."""
+from repro.connectome.routing import (cap_deletions, cap_requests,
+                                      formation_new, formation_old,
+                                      route_deletions)
+from repro.connectome.synapses import (SynapseTable, accept_requests,
+                                       add_out_edges, compact, counts,
+                                       edge_priority, init_synapses,
+                                       remove_edges_by_messages,
+                                       retract_synapses)
+from repro.connectome.traverse import phase_a, phase_b, phase_b_core
 
-Both algorithms share phase A (search the replicated upper tree down to the
-branch level). They differ in phase B exactly as the paper describes (§IV-A):
-
-OLD ("move data"): the searching rank downloads the remote subtrees (modeled
-as the all-gather of every rank's local tree + leaf neuron data — the
-cache-everything endpoint of the paper's RMA+cache scheme) and finishes the
-search locally. Then a plain formation request (source id, target id, type:
-17 B in the paper) is all-to-all exchanged for accept/decline.
-
-NEW ("move compute", location-aware): the searching rank ships a
-formation-AND-calculation request — source id, source position, target node,
-node kind, cell type: 42 B — to the rank owning the branch cell; that rank
-finishes the search against its own subtree (zero additional communication)
-and answers with (found id, success): 9 B.
-
-Both use the same keyed PRNG stream (source gid, restart round), so they form
-bit-identical synapses — tested in tests/test_brain_equivalence.py.
-"""
-from __future__ import annotations
-
-import math
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.msp_brain import BrainConfig
-from repro.core import barnes_hut as bh
-from repro.core import morton, octree
-
-
-class SynapseTable(NamedTuple):
-    out_edges: jnp.ndarray   # (n, S_max) target gids, -1 empty
-    in_edges: jnp.ndarray    # (n, S_max) source gids, -1 empty
-
-
-def init_synapses(n: int, s_max: int) -> SynapseTable:
-    e = jnp.full((n, s_max), -1, jnp.int32)
-    return SynapseTable(e, e)
-
-
-def counts(edges):
-    return jnp.sum(edges >= 0, axis=1)
-
-
-# ---------------------------------------------------------------- phase A
-def phase_a(top: octree.TopTree, pos, keys, cfg: BrainConfig, num_ranks: int):
-    """Search the replicated tree down to the branch level. pos: (Q,3).
-    Returns (branch_cell (Q,), valid (Q,))."""
-    b = morton.branch_level(num_ranks)
-    if b == 0:
-        q = pos.shape[0]
-        return jnp.zeros((q,), jnp.int32), jnp.ones((q,), bool)
-    tree = bh.stack_levels(top.counts, top.centroids, 0)
-    cell, valid, _ = bh.bh_search(
-        tree, pos, keys, jnp.zeros((pos.shape[0],), jnp.int32),
-        theta=cfg.theta, sigma=cfg.sigma, frontier=cfg.frontier_cap,
-        n_levels=b + 1)
-    return cell, valid
-
-
-# ---------------------------------------------------------------- phase B
-def phase_b(local: octree.LocalTree, neuron_pos, vacant_d, pos, keys,
-            start_cell_rel, valid_in, cfg: BrainConfig, num_ranks: int,
-            gid_base, src_gid):
-    """Finish the search inside one rank's subtree. start_cell_rel: (Q,) cell
-    index relative to this rank's branch cells. Returns (target_gid (Q,),
-    valid (Q,))."""
-    tree = bh.stack_levels(local.counts, local.centroids,
-                           morton.branch_level(num_ranks))
-    leaf_cell, valid, _ = bh.bh_search(
-        tree, pos, keys, start_cell_rel, theta=cfg.theta, sigma=cfg.sigma,
-        frontier=cfg.frontier_cap, n_levels=cfg.local_levels + 1)
-    valid = valid & valid_in
-    members = local.leaf_members[leaf_cell]            # (Q, M) local ids
-    mvalid = members >= 0
-    msafe = jnp.where(mvalid, members, 0)
-    mgid = gid_base + msafe
-    # exclude self-connection (a neuron never proposes to itself)
-    mvalid = mvalid & (mgid != src_gid[:, None])
-    mpos = neuron_pos[msafe]
-    mw = jnp.where(mvalid, vacant_d[msafe], 0.0)
-    kk = jax.vmap(lambda k: jax.random.fold_in(k, 1000))(keys)
-    pick, pvalid = bh.select_member(kk, pos, mpos, mw, mvalid, cfg.sigma)
-    tgt_local = jnp.take_along_axis(msafe, pick[:, None], axis=1)[:, 0]
-    tgt_gid = gid_base + tgt_local
-    return jnp.where(valid & pvalid, tgt_gid, -1), valid & pvalid
-
-
-# ---------------------------------------------------------------- accept
-def compact(edges):
-    """Push occupied slots to the front of each row (stable)."""
-    n, s_max = edges.shape
-    key = jnp.where(edges >= 0, jnp.arange(s_max)[None, :], s_max * 2)
-    order = jnp.argsort(key, axis=1)
-    return jnp.take_along_axis(edges, order, axis=1)
-
-
-def edge_priority(key, a_gid, b_gid):
-    """Deterministic per-(a,b) uniform — independent of buffer ordering, so
-    the old and new algorithms make identical accept/decline choices no
-    matter how requests were routed."""
-    k = jax.vmap(lambda a, b: jax.random.fold_in(jax.random.fold_in(key, a),
-                                                 b))(a_gid, b_gid)
-    return jax.vmap(lambda kk: jax.random.uniform(kk))(k)
-
-
-def accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key):
-    """Targets accept as many requests as they have vacant dendritic elements
-    (random subset — paper §III-A(c)); accepted requests are written into
-    in_edges (assumed compacted). Returns (accept (Q,) bool, new in_edges)."""
-    n, s_max = in_edges.shape
-    q = tgt_lid.shape[0]
-    lid = jnp.where(valid, tgt_lid, n)                  # bucket n = invalid
-    # acceptance rank within each target by keyed (src,tgt) priority —
-    # ordering-independent (paper: 'accept ... randomly')
-    prio = edge_priority(key, jnp.where(valid, src_gid, 0),
-                         jnp.where(valid, lid, 0))
-    order = jnp.lexsort((prio, lid))
-    rank_p = octree.positions_within(lid[order], n + 1)
-    rank_in_tgt = jnp.zeros((q,), jnp.int32).at[order].set(rank_p)
-    lid_c = jnp.clip(lid, 0, n - 1)
-    base = counts(in_edges)
-    free = s_max - base
-    cap = jnp.minimum(jnp.floor(jnp.where(valid, vacant_d[lid_c], 0.0)),
-                      free[lid_c].astype(jnp.float32))
-    accept = valid & (rank_in_tgt < cap)
-    slot = jnp.where(accept, base[lid_c] + rank_in_tgt, s_max)
-    new_in = in_edges.at[lid_c, jnp.clip(slot, 0, s_max)].set(
-        jnp.where(accept, src_gid, in_edges[lid_c, jnp.clip(slot, 0, s_max - 1)]),
-        mode="drop")
-    return accept, new_in
-
-
-def add_out_edges(out_edges, tgt_gid, accept):
-    """Write accepted targets into the source neurons' out-edge tables.
-    tgt_gid/accept: (n_sources,) — one pending request per source neuron."""
-    n, s_max = out_edges.shape
-    base = counts(out_edges)
-    slot = jnp.where(accept & (base < s_max), base, s_max)
-    return out_edges.at[jnp.arange(n), slot].set(
-        jnp.where(accept, tgt_gid, -1), mode="drop")
-
-
-# ---------------------------------------------------------------- deletion
-def retract_synapses(key, edges, n_delete, row_gids):
-    """Randomly break ``n_delete[i]`` bound synapses of neuron i (paper: 'one
-    is chosen randomly'). Priority is keyed by (row gid, edge gid) so the
-    choice is independent of slot ordering. Returns (new_edges, kill mask)."""
-    n, s_max = edges.shape
-    occupied = edges >= 0
-    flat_prio = edge_priority(
-        key, jnp.broadcast_to(row_gids[:, None], edges.shape).reshape(-1),
-        jnp.where(occupied, edges, 0).reshape(-1))
-    prio = jnp.where(occupied, flat_prio.reshape(edges.shape), 2.0)
-    order = jnp.argsort(prio, axis=1)                   # occupied first, random
-    ranks = jnp.zeros_like(edges).at[
-        jnp.arange(n)[:, None], order].set(jnp.arange(s_max)[None, :])
-    kill = occupied & (ranks < n_delete[:, None])
-    return jnp.where(kill, -1, edges), kill
-
-
-def remove_edges_by_messages(edges, msg_lid, msg_gid, msg_valid):
-    """Remove the first slot equal to msg_gid from row msg_lid, sequentially
-    (messages may target the same row)."""
-    def body(i, e):
-        lid = msg_lid[i]
-        gid = msg_gid[i]
-        row = e[lid]
-        hit = row == gid
-        first = jnp.argmax(hit)
-        do = msg_valid[i] & jnp.any(hit)
-        row = row.at[first].set(jnp.where(do, -1, row[first]))
-        return e.at[lid].set(jnp.where(do, row, e[lid]))
-    return jax.lax.fori_loop(0, msg_lid.shape[0], body, edges)
+__all__ = ["SynapseTable", "accept_requests", "add_out_edges",
+           "cap_deletions", "cap_requests", "compact", "counts",
+           "edge_priority", "formation_new", "formation_old",
+           "init_synapses", "phase_a", "phase_b", "phase_b_core",
+           "remove_edges_by_messages", "retract_synapses",
+           "route_deletions"]

@@ -25,10 +25,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.configs.msp_brain import BrainConfig
-from repro.core import connectivity as conn
-from repro.core import morton, octree, spikes
-from repro.core.neuron import (NeuronParams, NeuronState, init_neurons,
-                               refresh_rate)
+from repro.connectome import init_synapses
+from repro.connectome.update import connectivity_update
+from repro.core import morton, spikes
+from repro.core.neuron import NeuronParams, NeuronState, init_neurons
 from repro.kernels import ops as kops
 from repro.kernels.activity_fused import step_core
 from repro.scenarios import populations as pops
@@ -55,29 +55,6 @@ def _neuron_params(table: "pops.PopulationTable") -> NeuronParams:
                         table.growth_rate, table.target_calcium)
 
 
-def _cap_requests(cfg, num_ranks):
-    """Per-(source, dest)-rank request buffer capacity. Locality skews demand
-    toward the home rank, so tests/benchmarks needing zero overflow set
-    requests_cap_factor >= num_ranks (=> cap = n)."""
-    n = cfg.neurons_per_rank
-    per_dest = max(n // max(num_ranks, 1), 1) * cfg.requests_cap_factor
-    return min(n, max(32, -(-per_dest // 8) * 8))
-
-
-def _cap_deletions(cfg, lesions: bool = False):
-    """Deletion-message buffer capacity. Lesion protocols retract EVERY edge
-    of a dead neuron in one update, so the cap then scales with
-    requests_cap_factor like the formation buffers (n * s_max is the most a
-    rank can ever send to one destination); without lesions the seed's
-    homeostatic trickle keeps the original small buffer (and its collective
-    bytes) unchanged."""
-    n = cfg.neurons_per_rank
-    if not lesions:
-        return max(16, n // 4)
-    return min(n * cfg.max_synapses,
-               max(16, (n // 4) * cfg.requests_cap_factor))
-
-
 # ================================================================ init
 def init_state(cfg: BrainConfig, rank, num_ranks: int,
                scenario=None) -> BrainState:
@@ -90,7 +67,7 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int,
     table = pops.table_for(cfg, scenario, n)
     neurons = init_neurons(kn, cfg, n, params=_neuron_params(table),
                            is_excitatory=table.is_excitatory)
-    syn = conn.init_synapses(n, cfg.max_synapses)
+    syn = init_synapses(n, cfg.max_synapses)
     # (1,)-shaped per-rank counters: sharded over 'ranks', summed at read time
     stats = {k: jnp.zeros((1,), jnp.float32) for k in STAT_KEYS}
     return BrainState(neurons, syn.out_edges, syn.in_edges, pos,
@@ -157,7 +134,7 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
     def step(carry, t):
         st, stats = carry
         if cfg.spike_alg == "old":
-            all_ids, counts_ = spikes.exchange_spiked_ids(
+            all_ids, _ = spikes.exchange_spiked_ids(
                 st[5], rank, n, axis_name, num_ranks)
             hits = spikes.lookup_spikes(all_ids, state.in_edges, n)
             remote_in = hits & ((state.in_edges // n) != rank) \
@@ -184,249 +161,14 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
 # ================================================================ connectivity
 def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                        num_ranks: int, scenario=None):
-    n = cfg.neurons_per_rank
-    s_max = cfg.max_synapses
-    # chunk_key is rank-independent: every rank derives the same stream, so
-    # per-(gid) sub-streams are reproducible wherever the computation runs —
-    # the property that makes old == new bit-identical (DESIGN.md §2)
-    chunk_key = jax.random.fold_in(jax.random.key(cfg.seed + 2), state.chunk)
-    key = chunk_key
-    gid0 = rank * n
-    gids = gid0 + jnp.arange(n, dtype=jnp.int32)
-    stats = dict(state.stats)
-
-    # lesion mask at the update instant (the step right after this chunk's
-    # activity scan). Applied BEFORE the algorithm branch so 'old' and 'new'
-    # see identical inputs — the bit-identity invariant holds per protocol.
-    events = scenario.events if scenario is not None else ()
-    alive = proto.alive_mask(events, scenario.regions, state.positions,
-                             (state.chunk + 1) * cfg.rate_period) \
-        if events else None
-    if alive is not None:
-        # dead neurons lose all synaptic elements -> full retraction below,
-        # partners are notified and regain vacant elements
-        state = state._replace(neurons=state.neurons._replace(
-            ax_elements=jnp.where(alive, state.neurons.ax_elements, 0.0),
-            de_elements=jnp.where(alive, state.neurons.de_elements, 0.0)))
-
-    # ---- deletion by retraction (phase 3a) -------------------------------
-    out_edges, in_edges = state.out_edges, state.in_edges
-    out_cnt, in_cnt = conn.counts(out_edges), conn.counts(in_edges)
-    del_out = jnp.maximum(
-        out_cnt - jnp.floor(state.neurons.ax_elements).astype(jnp.int32), 0)
-    del_in = jnp.maximum(
-        in_cnt - jnp.floor(state.neurons.de_elements).astype(jnp.int32), 0)
-    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
-    out_edges, kill_out = conn.retract_synapses(k1, out_edges, del_out, gids)
-    in_edges, kill_in = conn.retract_synapses(k2, in_edges, del_in, gids)
-    stats["synapses_deleted"] = stats["synapses_deleted"] + \
-        jnp.sum(kill_out) + jnp.sum(kill_in)
-
-    # notify partners (paper: 'the affected partner gains a vacant element')
-    def route_deletions(kill, edges, my_gid_col):
-        flat_other = jnp.where(kill, edges, -1).reshape(-1)
-        flat_mine = jnp.broadcast_to(my_gid_col, kill.shape).reshape(-1)
-        valid = flat_other >= 0
-        dest = jnp.where(valid, flat_other // n, num_ranks)
-        cap = _cap_deletions(cfg, proto.has_lesions(scenario))
-        slot = octree.positions_within(dest, num_ranks + 1)
-        ok = valid & (slot < cap)
-        buf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
-        buf = buf.at[jnp.where(ok, dest, num_ranks),
-                     jnp.where(ok, slot, 0)].set(
-            jnp.stack([jnp.where(ok, flat_other, -1),
-                       jnp.where(ok, flat_mine, -1)], -1), mode="drop")
-        if num_ranks > 1:
-            buf = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=True)
-        return buf.reshape(num_ranks * cap, 2), \
-            jnp.sum(valid & ~ok).astype(jnp.float32)
-
-    # old edges (pre-retraction) were already overwritten; use kill masks on
-    # the pre-retraction tables captured above via state
-    msgs_out, ovf_out = route_deletions(kill_out, state.out_edges,
-                                        gids[:, None])
-    msgs_in, ovf_in = route_deletions(kill_in, state.in_edges, gids[:, None])
-    # dropped notifications leave stale partner edges — surface them
-    stats["request_overflow"] = stats["request_overflow"] + ovf_out + ovf_in
-    # apply: partner of my out-edge removes its in-edge, and vice versa
-    in_edges = conn.remove_edges_by_messages(
-        in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1), msgs_out[:, 1],
-        (msgs_out[:, 0] >= gid0) & (msgs_out[:, 0] < gid0 + n))
-    out_edges = conn.remove_edges_by_messages(
-        out_edges, jnp.clip(msgs_in[:, 0] - gid0, 0, n - 1), msgs_in[:, 1],
-        (msgs_in[:, 0] >= gid0) & (msgs_in[:, 0] < gid0 + n))
-    out_edges, in_edges = conn.compact(out_edges), conn.compact(in_edges)
-
-    # ---- formation (phase 3b) --------------------------------------------
-    out_cnt, in_cnt = conn.counts(out_edges), conn.counts(in_edges)
-    vac_a = jnp.floor(state.neurons.ax_elements).astype(jnp.int32) - out_cnt
-    vac_d = state.neurons.de_elements - in_cnt.astype(jnp.float32)
-    vac_d_pos = jnp.maximum(vac_d, 0.0)
-
-    local_tree = octree.build_local_tree(state.positions, vac_d_pos, rank,
-                                         cfg, num_ranks)
-    top = octree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
-
-    searching = vac_a >= 1
-    if alive is not None:
-        # dead neurons neither search for partners nor offer vacancies
-        searching = searching & alive
-        vac_d_pos = jnp.where(alive, vac_d_pos, 0.0)
-    # per-searcher stream derived from (chunk_key, gid) — reconstructible on
-    # the owning rank in the new algorithm (see _formation_new)
-    skeys = jax.vmap(lambda g: jax.random.fold_in(chunk_key, g))(gids)
-    branch_cell, valid_a = conn.phase_a(top, state.positions, skeys, cfg,
-                                        num_ranks)
-    valid_a = valid_a & searching
-    c_per = morton.cells_per_rank(num_ranks)
-    owner = jnp.clip(branch_cell // c_per, 0, num_ranks - 1)
-    start_rel = branch_cell - owner * c_per
-    stats["bh_requests"] = stats["bh_requests"] + jnp.sum(valid_a)
-
-    if cfg.connectivity_alg == "new":
-        tgt_gid, accept, ovf = _formation_new(
-            cfg, state, local_tree, vac_d_pos, in_edges, gids, skeys,
-            branch_cell, owner, start_rel, valid_a, rank, axis_name,
-            num_ranks, k4)
-        in_edges_new = accept.pop("in_edges")
-        stats["request_overflow"] = stats["request_overflow"] + ovf
-        stats["bh_responses"] = stats["bh_responses"] + jnp.sum(
-            accept["accepted"])
-        out_edges = conn.add_out_edges(out_edges, tgt_gid, accept["accepted"])
-        in_edges = in_edges_new
-        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(
-            accept["accepted"])
-    else:
-        tgt_gid, accepted, new_in, downloaded = _formation_old(
-            cfg, state, local_tree, vac_d_pos, in_edges, gids, skeys,
-            branch_cell, owner, start_rel, valid_a, rank, axis_name,
-            num_ranks, k4)
-        out_edges = conn.add_out_edges(out_edges, tgt_gid, accepted)
-        in_edges = new_in
-        stats["tree_nodes_downloaded"] = stats["tree_nodes_downloaded"] \
-            + downloaded
-        stats["formation_requests"] = stats["formation_requests"] + jnp.sum(
-            valid_a)
-        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
-
-    neurons = refresh_rate(state.neurons, cfg, alive)
-    if cfg.spike_alg == "old":
-        # the rates table is dead state on the old spike path — skip the
-        # per-chunk all-gather (and its accounting) entirely
-        rates_table = state.rates_table
-    else:
-        rates_table = spikes.exchange_rates(neurons.rate, axis_name,
-                                            num_ranks)
-        stats["rates_sent"] = stats["rates_sent"] + float(n)
-    return state._replace(neurons=neurons, out_edges=out_edges,
-                          in_edges=in_edges, rates_table=rates_table,
-                          chunk=state.chunk + 1, stats=stats)
-
-
-def _formation_new(cfg, state, local_tree, vac_d_pos, in_edges, gids, skeys,
-                   branch_cell, owner, start_rel, valid_a, rank, axis_name,
-                   num_ranks, key):
-    """Location-aware algorithm: 42B requests out, local phase B + accept,
-    9B responses back."""
-    n = cfg.neurons_per_rank
-    cap = _cap_requests(cfg, num_ranks)
-    dest = jnp.where(valid_a, owner, num_ranks)
-    slot = octree.positions_within(dest, num_ranks + 1)
-    ok = valid_a & (slot < cap)
-    ovf = jnp.sum(valid_a & ~ok).astype(jnp.float32)
-
-    ibuf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)   # src_gid, start_cell
-    fbuf = jnp.zeros((num_ranks, cap, 3), jnp.float32)    # position
-    d_c = jnp.where(ok, dest, num_ranks)
-    s_c = jnp.where(ok, slot, 0)
-    ibuf = ibuf.at[d_c, s_c].set(
-        jnp.stack([jnp.where(ok, gids, -1), start_rel], -1), mode="drop")
-    fbuf = fbuf.at[d_c, s_c].set(state.positions, mode="drop")
-    if num_ranks > 1:
-        ibuf = jax.lax.all_to_all(ibuf, axis_name, 0, 0, tiled=True)
-        fbuf = jax.lax.all_to_all(fbuf, axis_name, 0, 0, tiled=True)
-
-    r_src = ibuf[..., 0].reshape(-1)
-    r_cell = ibuf[..., 1].reshape(-1)
-    r_pos = fbuf.reshape(-1, 3)
-    r_valid = r_src >= 0
-    # receiver reconstructs the SAME per-searcher stream from the source gid
-    chunk_key = jax.random.fold_in(jax.random.key(cfg.seed + 2), state.chunk)
-    rkeys = jax.vmap(lambda g: jax.random.fold_in(chunk_key, g))(
-        jnp.where(r_valid, r_src, 0))
-    # continue traversal on the owning rank (phase B)
-    tgt, bvalid = conn.phase_b(local_tree, state.positions, vac_d_pos, r_pos,
-                               rkeys, jnp.clip(r_cell, 0, None), r_valid,
-                               cfg, num_ranks, rank * n,
-                               jnp.where(r_valid, r_src, -2))
-    # accept/decline where the target lives (same rank — no extra comms)
-    acc, new_in = conn.accept_requests(
-        jnp.clip(tgt - rank * n, 0, n - 1), r_src, bvalid & (tgt >= 0),
-        vac_d_pos, in_edges, key)
-    # 9B responses retrace the request route
-    rbuf = jnp.stack([jnp.where(acc, tgt, -1),
-                      acc.astype(jnp.int32)], -1).reshape(num_ranks, cap, 2)
-    if num_ranks > 1:
-        rbuf = jax.lax.all_to_all(rbuf, axis_name, 0, 0, tiled=True)
-    resp_tgt = rbuf[d_c, s_c, 0]
-    resp_ok = (rbuf[d_c, s_c, 1] > 0) & ok
-    return resp_tgt, {"accepted": resp_ok, "in_edges": new_in}, ovf
-
-
-def _formation_old(cfg, state, local_tree, vac_d_pos, in_edges, gids, skeys,
-                   branch_cell, owner, start_rel, valid_a, rank, axis_name,
-                   num_ranks, key):
-    """Baseline: download every rank's subtree + leaf data (RMA+cache
-    endpoint), search locally, then exchange 17B formation requests."""
-    n = cfg.neurons_per_rank
-    # ---- the download: all levels, members, positions, weights ----
-    if num_ranks > 1:
-        g_counts = tuple(jax.lax.all_gather(c, axis_name, axis=0, tiled=True)
-                         for c in local_tree.counts)
-        g_cents = tuple(jax.lax.all_gather(z, axis_name, axis=0, tiled=True)
-                        for z in local_tree.centroids)
-        members_g = jnp.where(local_tree.leaf_members >= 0,
-                              local_tree.leaf_members + rank * n, -1)
-        g_members = jax.lax.all_gather(members_g, axis_name, axis=0,
-                                       tiled=True)
-        g_pos = jax.lax.all_gather(state.positions, axis_name, axis=0,
-                                   tiled=True)
-        g_vac = jax.lax.all_gather(vac_d_pos, axis_name, axis=0, tiled=True)
-    else:
-        g_counts, g_cents = local_tree.counts, local_tree.centroids
-        g_members = local_tree.leaf_members
-        g_pos, g_vac = state.positions, vac_d_pos
-    downloaded = (sum(c.shape[0] for c in g_counts) + g_pos.shape[0]) \
-        * (num_ranks - 1) / max(num_ranks, 1)
-    g_tree = octree.LocalTree(g_counts, g_cents, g_members,
-                              jnp.zeros((), jnp.int32))
-    # ---- phase B locally for my searchers (same PRNG stream as 'new') ----
-    tgt, bvalid = conn.phase_b(g_tree, g_pos, g_vac, state.positions, skeys,
-                               branch_cell, valid_a, cfg, num_ranks, 0, gids)
-    # ---- classic 17B formation request to the target's rank ----
-    cap = _cap_requests(cfg, num_ranks)
-    dest = jnp.where(bvalid & (tgt >= 0), tgt // n, num_ranks)
-    slot = octree.positions_within(dest, num_ranks + 1)
-    ok = (dest < num_ranks) & (slot < cap)
-    ibuf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
-    d_c = jnp.where(ok, dest, num_ranks)
-    s_c = jnp.where(ok, slot, 0)
-    ibuf = ibuf.at[d_c, s_c].set(
-        jnp.stack([jnp.where(ok, gids, -1), jnp.where(ok, tgt, -1)], -1),
-        mode="drop")
-    if num_ranks > 1:
-        ibuf = jax.lax.all_to_all(ibuf, axis_name, 0, 0, tiled=True)
-    r_src = ibuf[..., 0].reshape(-1)
-    r_tgt = ibuf[..., 1].reshape(-1)
-    r_valid = (r_src >= 0) & (r_tgt >= 0)
-    acc, new_in = conn.accept_requests(
-        jnp.clip(r_tgt - rank * n, 0, n - 1), r_src, r_valid, vac_d_pos,
-        in_edges, key)
-    rbuf = acc.astype(jnp.int32).reshape(num_ranks, cap)
-    if num_ranks > 1:
-        rbuf = jax.lax.all_to_all(rbuf, axis_name, 0, 0, tiled=True)
-    accepted = (rbuf[d_c, s_c] > 0) & ok
-    return tgt, accepted, new_in, jnp.asarray(downloaded, jnp.float32)
+    """One structural-plasticity update — owned by the connectome subsystem
+    (repro.connectome: tree build, Barnes-Hut traversal, request routing,
+    synapse-table ops; DESIGN.md §6). ``cfg.connectivity_alg`` picks the
+    paper's algorithm pair (old = move data, new = move compute);
+    ``cfg.connectivity_impl`` picks the phase-B lowering (reference jnp vs
+    the Pallas traversal kernel — bit-identical)."""
+    return connectivity_update(state, cfg, rank, axis_name, num_ranks,
+                               scenario)
 
 
 # ================================================================ driver

@@ -1,107 +1,9 @@
-"""Level-array spatial octree (TPU-native adaptation of the paper's pointer
-octree; DESIGN.md §2).
+"""Compat shim — the level-array octree moved to ``repro.connectome.tree``
+(PR 3: the connectome subsystem owns the whole connectivity update). This
+module re-exports the public surface so existing imports keep working."""
+from repro.connectome.tree import (LocalTree, TopTree, build_local_tree,
+                                   build_top_tree, exchange_branch_nodes,
+                                   node_center, positions_within)
 
-A node at octree level L covering Morton cell c has children 8c..8c+7 at level
-L+1 — the tree is a family of dense per-level arrays (vacant-element counts +
-weighted centroids), and bottom-up aggregation is a reshape(-1, 8).sum trick
-because Morton order keeps siblings contiguous.
-
-Two trees exist (paper Fig. 1):
-  * the rank-local tree: levels b .. b+local_levels over the rank's own cells;
-  * the replicated upper tree: levels 0 .. b, built from the all-exchanged
-    branch nodes (Alg. 1, line 3).
-"""
-from __future__ import annotations
-
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import morton
-
-
-class LocalTree(NamedTuple):
-    """Per-rank subtree. levels[k] covers octree level (b + k); arrays are
-    (n_cells_k,) counts and (n_cells_k, 3) centroid sums (weighted by counts).
-    leaf_members: (n_leaf_cells, M) local neuron indices (-1 pad)."""
-    counts: tuple           # tuple over relative level 0..L of (cells,) f32
-    centroids: tuple        # matching (cells, 3) f32 (weighted position SUM)
-    leaf_members: jnp.ndarray
-    base_cell: jnp.ndarray  # first branch cell owned by this rank (scalar i32)
-
-
-class TopTree(NamedTuple):
-    """Replicated upper tree: levels 0..b (level k has 8^k cells)."""
-    counts: tuple
-    centroids: tuple
-
-
-def positions_within(ids, num_buckets: int):
-    """Rank of each element within its bucket (stable)."""
-    n = ids.shape[0]
-    order = jnp.argsort(ids, stable=True)
-    sorted_ids = ids[order]
-    first = jnp.searchsorted(sorted_ids, jnp.arange(num_buckets), side="left")
-    ranks = jnp.arange(n, dtype=jnp.int32) - first[sorted_ids].astype(jnp.int32)
-    return jnp.zeros((n,), jnp.int32).at[order].set(ranks)
-
-
-def build_local_tree(positions, weights, rank, cfg, num_ranks: int,
-                     members_cap: int = 4) -> LocalTree:
-    """positions: (n,3); weights: (n,) vacant dendritic elements (>=0).
-    rank: scalar int (traced ok). Returns the rank's subtree."""
-    b = morton.branch_level(num_ranks)
-    c_per = morton.cells_per_rank(num_ranks)
-    lloc = cfg.local_levels
-    leaf_level = b + lloc
-    base_cell = rank * c_per
-
-    leaf_cells_abs = morton.morton_encode(positions, leaf_level)
-    # relative leaf index within the rank's subdomain block
-    rel = leaf_cells_abs - base_cell * (8 ** lloc)
-    n_leaf = c_per * 8 ** lloc
-    rel = jnp.clip(rel, 0, n_leaf - 1)
-
-    counts = [jnp.zeros((n_leaf,), jnp.float32).at[rel].add(weights)]
-    centroids = [jnp.zeros((n_leaf, 3), jnp.float32).at[rel].add(
-        positions * weights[:, None])]
-    for _ in range(lloc):
-        counts.insert(0, counts[0].reshape(-1, 8).sum(1))
-        centroids.insert(0, centroids[0].reshape(-1, 8, 3).sum(1))
-
-    # leaf membership table (cap M per leaf; overflow dropped this round)
-    m = members_cap
-    slot = positions_within(rel, n_leaf)
-    ok = slot < m
-    tbl = jnp.full((n_leaf, m), -1, jnp.int32)
-    tbl = tbl.at[rel, jnp.where(ok, slot, m)].set(
-        jnp.arange(positions.shape[0], dtype=jnp.int32), mode="drop")
-    return LocalTree(tuple(counts), tuple(centroids), tbl,
-                     jnp.asarray(base_cell, jnp.int32))
-
-
-def build_top_tree(branch_counts, branch_centroids, num_ranks: int) -> TopTree:
-    """branch_*: (8^b,) / (8^b, 3) — the all-exchanged branch nodes.
-    Aggregates the replicated levels b-1 .. 0."""
-    b = morton.branch_level(num_ranks)
-    counts = [branch_counts]
-    cents = [branch_centroids]
-    for _ in range(b):
-        counts.insert(0, counts[0].reshape(-1, 8).sum(1))
-        cents.insert(0, cents[0].reshape(-1, 8, 3).sum(1))
-    return TopTree(tuple(counts), tuple(cents))
-
-
-def exchange_branch_nodes(local: LocalTree, axis_name: str,
-                          num_ranks: int) -> TopTree:
-    """Alg. 1 line 3: all_exchange_branch_nodes. The rank's level-0 (= branch)
-    arrays are concatenated across ranks in Morton order."""
-    bc = jax.lax.all_gather(local.counts[0], axis_name, axis=0, tiled=True)
-    bz = jax.lax.all_gather(local.centroids[0], axis_name, axis=0, tiled=True)
-    return build_top_tree(bc, bz, num_ranks)
-
-
-def node_center(centroid_sum, count):
-    """Weighted mean position of a node (centroid of vacant elements)."""
-    return centroid_sum / jnp.maximum(count, 1e-9)[..., None]
+__all__ = ["LocalTree", "TopTree", "build_local_tree", "build_top_tree",
+           "exchange_branch_nodes", "node_center", "positions_within"]

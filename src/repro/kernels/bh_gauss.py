@@ -59,21 +59,25 @@ def _kernel(x_ref, y_ref, w_ref, p_ref, rs_ref, acc_scr, *, sigma: float,
 def bh_gauss_probs(x, y, w, *, sigma: float, block_n=256, block_m=256,
                    interpret=False):
     """x: (N, 3) searcher positions; y: (M, 3) candidate positions;
-    w: (M,) vacant-element weights. Returns (P (N, M), rowsum (N,))."""
+    w: (M,) vacant-element weights. Returns (P (N, M), rowsum (N,)).
+
+    n/m that are not multiples of the block are padded up to it and the
+    outputs sliced (padded candidates carry w=0, so P and the row-sum are
+    untouched) — shrinking the block to a divisor would degrade to block=1
+    for prime sizes (the same fix ``neuron_step`` got)."""
     n, _ = x.shape
     m, _ = y.shape
     bn = min(block_n, n)
     bm = min(block_m, m)
-    while n % bn:
-        bn -= 1
-    while m % bm:
-        bm -= 1
-    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, PAD - 3)))
-    yp = jnp.pad(y.astype(jnp.float32), ((0, 0), (0, PAD - 3)))
+    n_pad = -(-n // bn) * bn
+    m_pad = -(-m // bm) * bm
+    xp = jnp.pad(x.astype(jnp.float32), ((0, n_pad - n), (0, PAD - 3)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, m_pad - m), (0, PAD - 3)))
+    wp = jnp.pad(w.astype(jnp.float32), (0, m_pad - m))
     kern = functools.partial(_kernel, sigma=sigma, bn=bn, bm=bm)
-    return pl.pallas_call(
+    p, rs = pl.pallas_call(
         kern,
-        grid=(n // bn, m // bm),
+        grid=(n_pad // bn, m_pad // bm),
         in_specs=[
             pl.BlockSpec((bn, PAD), lambda ni, mi: (ni, 0)),
             pl.BlockSpec((bm, PAD), lambda ni, mi: (mi, 0)),
@@ -83,8 +87,11 @@ def bh_gauss_probs(x, y, w, *, sigma: float, block_n=256, block_m=256,
             pl.BlockSpec((bn, bm), lambda ni, mi: (ni, mi)),
             pl.BlockSpec((bn,), lambda ni, mi: (ni,)),
         ],
-        out_shape=[jax.ShapeDtypeStruct((n, m), jnp.float32),
-                   jax.ShapeDtypeStruct((n,), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((n_pad, m_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((bn,), jnp.float32)],
         interpret=interpret,
-    )(xp, yp, w.astype(jnp.float32))
+    )(xp, yp, wp)
+    if n_pad != n or m_pad != m:
+        p, rs = p[:n, :m], rs[:n]
+    return p, rs

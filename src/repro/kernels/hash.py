@@ -16,6 +16,11 @@ is what makes fused == reference bit-for-bit (DESIGN.md §5).
 Entity ids: per-neuron streams use the global neuron id, per-edge streams
 use ``dst_gid * s_max + slot``. Ids are folded mod 2^32 — collisions across
 domains are prevented by the domain word in the key.
+
+The Barnes-Hut traversal (repro.connectome.traverse and the Pallas kernel
+kernels/bh_traverse.py) draws its Gumbels from the same primitive, keyed by
+``(seed, BH_DOMAIN, bh_ctr(chunk, round, draw), source_gid)`` — the
+counter packs the restart round and the frontier/member draw slot.
 """
 from __future__ import annotations
 
@@ -24,6 +29,15 @@ import jax.numpy as jnp
 # Domain separators (arbitrary distinct u32 constants).
 NOISE_DOMAIN = 0x6E6F6973    # per-neuron background-noise gaussians
 SPIKE_DOMAIN = 0x73706B73    # per-edge Bernoulli(rate) reconstruction
+BH_DOMAIN = 0x62687472       # Barnes-Hut traversal/member Gumbel draws
+
+# Barnes-Hut counter layout (see bh_ctr): each chunk owns BH_ROUNDS round
+# slots, each round BH_DRAWS draw slots. Phase A expands from round 0,
+# phase B from round 16, and member selection uses the last round — so the
+# three stages of one searcher's chunk never share a counter. Static caps:
+# frontier_cap and members_cap must be <= BH_DRAWS (checked at trace time).
+BH_ROUNDS = 64
+BH_DRAWS = 128
 
 _PARITY = 0x1BD11BDA         # threefry key-schedule parity constant
 _ROT_A = (13, 15, 26, 6)     # rotation schedule, even 4-round groups
@@ -72,6 +86,20 @@ def uniform(seed: int, domain: int, ctr, entity):
     """f32 uniform in [0, 1), elementwise over broadcast(ctr, entity)."""
     x0, _ = bits(seed, domain, ctr, entity)
     return _to_unit(x0)
+
+
+def bh_ctr(chunk, rnd, draw):
+    """Pack the Barnes-Hut (chunk, round, draw) triple into one u32 counter.
+    Wraps mod 2^32 after ~524k chunks — harmless (the stream stays keyed and
+    reproducible; only cross-epoch decorrelation would degrade)."""
+    return (jnp.asarray(chunk, jnp.int32) * BH_ROUNDS + rnd) * BH_DRAWS + draw
+
+
+def gumbel(seed: int, domain: int, ctr, entity):
+    """f32 standard Gumbel, elementwise over broadcast(ctr, entity).
+    u is clamped away from 0 so both logs stay finite."""
+    u = uniform(seed, domain, ctr, entity)
+    return -jnp.log(-jnp.log(jnp.maximum(u, jnp.float32(1e-20))))
 
 
 def normal(seed: int, domain: int, ctr, entity):

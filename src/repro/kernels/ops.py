@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels.activity_fused import activity_window
 from repro.kernels.bh_gauss import bh_gauss_probs
+from repro.kernels.bh_traverse import bh_traverse as bh_traverse_kernel
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.neuron_step import neuron_step
 
@@ -44,6 +45,20 @@ def fused_neuron_step(v, u, ca, ax, de, inp, cfg, *, params=None,
         interpret = _interpret_default()
     return neuron_step(v, u, ca, ax, de, inp, cfg, params=params,
                        interpret=interpret)
+
+
+def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
+                valid, chunk, gid_base, *, seed, sizes, theta, sigma,
+                frontier, n_levels, interpret=None):
+    """Phase-B Barnes-Hut traversal kernel (see kernels/bh_traverse.py).
+    Not jitted here: it runs inside the engine's jitted shard_map."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return bh_traverse_kernel(counts, cents, members, npos, vac, x,
+                              start_cell, src_gid, valid, chunk, gid_base,
+                              seed=seed, sizes=sizes, theta=theta,
+                              sigma=sigma, frontier=frontier,
+                              n_levels=n_levels, interpret=interpret)
 
 
 def fused_activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,

@@ -93,11 +93,10 @@ def test_bh_search_prefers_nearby_mass():
     stacked = bh.stack_levels(tree.counts, tree.centroids, 0)
     q = 64
     x = jnp.tile(jnp.array([[0.1, 0.1, 0.1]]), (q, 1))
-    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(4), i))(
-        jnp.arange(q))
     cell, valid, overflow = bh.bh_search(
-        stacked, x, keys, jnp.zeros((q,), jnp.int32), theta=cfg.theta,
-        sigma=cfg.sigma, frontier=cfg.frontier_cap,
+        stacked, x, jnp.arange(q, dtype=jnp.int32),
+        jnp.zeros((q,), jnp.int32), seed=4, chunk=jnp.int32(0),
+        theta=cfg.theta, sigma=cfg.sigma, frontier=cfg.frontier_cap,
         n_levels=cfg.local_levels + 1)
     assert bool(jnp.all(valid))
     centers = morton.morton_cell_center(cell, cfg.local_levels)
@@ -111,10 +110,9 @@ def test_bh_theta_zero_like_behavior_is_exact_leafs():
     pos = jax.random.uniform(jax.random.key(5), (32, 3), maxval=0.999)
     tree = octree.build_local_tree(pos, jnp.ones(32), 0, cfg, num_ranks=1)
     stacked = bh.stack_levels(tree.counts, tree.centroids, 0)
-    keys = jax.vmap(lambda i: jax.random.fold_in(jax.random.key(6), i))(
-        jnp.arange(32))
     cell, valid, _ = bh.bh_search(
-        stacked, pos, keys, jnp.zeros((32,), jnp.int32), theta=0.05,
+        stacked, pos, jnp.arange(32, dtype=jnp.int32),
+        jnp.zeros((32,), jnp.int32), seed=6, chunk=jnp.int32(0), theta=0.05,
         sigma=cfg.sigma, frontier=64, n_levels=cfg.local_levels + 1)
     # all returned nodes are leaf-level cells with actual neurons
     counts_leaf = np.asarray(tree.counts[-1])

@@ -54,7 +54,9 @@ def test_flash_matches_chunked_jax_attention():
                                rtol=3e-5, atol=3e-5)
 
 
-@pytest.mark.parametrize("n,m", [(64, 64), (128, 192), (100, 60)])
+# (300, 257): above the 256 block and not a multiple — exercises the pad-up
+# path (the old code shrank the block toward 1 for primes)
+@pytest.mark.parametrize("n,m", [(64, 64), (128, 192), (100, 60), (300, 257)])
 @pytest.mark.parametrize("sigma", [0.1, 0.25, 0.75])
 def test_bh_gauss(n, m, sigma):
     k = jax.random.key(3)
