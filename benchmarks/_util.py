@@ -83,7 +83,12 @@ def paper_bytes_from_stats(stats, alg_conn: str, alg_spike: str,
         b += s["formation_requests"] * (PAPER_BYTES["old_request"] + 1)
         b += s["tree_nodes_downloaded"] * PAPER_BYTES["tree_node"]
     if alg_spike == "new":
-        b += s["rates_sent"] * PAPER_BYTES["rate"] * max(num_ranks - 1, 0)
+        # rates_sent already counts rate records actually shipped (dense:
+        # n*(R-1) broadcast per rank per Delta; sparse: the subscribed
+        # pushes) — no fan-out factor here. The sparse exchange also ships
+        # one 4B subscription-request id per pushed rate (zero under dense).
+        b += s["rates_sent"] * PAPER_BYTES["rate"]
+        b += s.get("subscription_requests", 0.0) * PAPER_BYTES["rate"]
     else:
         b += s["spikes_sent"] * PAPER_BYTES["spike_id"] * max(num_ranks - 1, 0)
     return b, s

@@ -1,25 +1,99 @@
-"""Paper Fig. 4: spike-transmission time, per-step spiked-ID exchange vs
-Delta-periodic rate exchange. The chunk is dominated by the activity phase
-(rate_period=100, connectivity barely active)."""
+"""Paper Fig. 4: spike-transmission cost. Two sweeps:
+
+  * spike_alg old vs new — per-step spiked-ID exchange vs Delta-periodic
+    rate exchange (the chunk is dominated by the activity phase);
+  * rate_exchange dense vs sparse (spike_alg='new') — the replicated (R, n)
+    rates all-gather vs the demand-driven subscription push (DESIGN.md §7),
+    with the measured exchanged-rate-record counters next to wall time.
+
+Exchange volume comes from ``stats['rates_sent']`` (rate records actually
+shipped: dense = n*(R-1) per rank per Delta, sparse = the subscribed
+pushes), so the byte drop R*n*4 -> |subs|*4 is measured, not modeled. The
+sparse exchange additionally ships one 4B subscription-request id per
+pushed rate (``stats['subscription_requests']``) — reported separately and
+folded into ``total_bytes_ratio`` so the sparse win is not overstated.
+
+``--json`` writes ``BENCH_spikes.json`` at the repo root (the recorded
+perf-trajectory baseline: r=4, n=1024); ``--smoke`` runs a small n for CI
+and writes ``BENCH_spikes_smoke.json`` instead, so reproducing the CI step
+locally cannot clobber the committed baseline.
+"""
+import json
+import os
 import sys
 
-from benchmarks._util import brain_sim, emit
+from benchmarks._util import PAPER_BYTES, ROOT, brain_sim, emit
+
+
+def bench(n, chunks=2):
+    import jax
+    import numpy as np
+    from repro.core.spikes import NO_SUB
+    r = len(jax.devices())
+    base = dict(neurons_per_rank=n, local_levels=3, frontier_cap=32,
+                max_synapses=16, connectivity_alg="new", rate_period=100,
+                requests_cap_factor=max(r, 4), subs_cap_factor=max(r, 4))
+    runs = {"old": dict(base, spike_alg="old"),
+            "dense": dict(base, rate_exchange="dense"),
+            "sparse": dict(base, rate_exchange="sparse")}
+    times, states = {}, {}
+    for name, cfg in runs.items():
+        times[name], states[name] = brain_sim(cfg, chunks=chunks)
+
+    chunks_total = chunks + 1   # brain_sim's warmup chunk also accumulates
+    rep = {"num_ranks": r, "n_per_rank": n, "delta": base["rate_period"],
+           "old_us_per_chunk": times["old"] * 1e6,
+           "dense_us_per_chunk": times["dense"] * 1e6,
+           "sparse_us_per_chunk": times["sparse"] * 1e6}
+    for name in ("dense", "sparse"):
+        sent = float(states[name].stats["rates_sent"].sum())
+        rep[f"{name}_rate_records_per_delta"] = sent / chunks_total
+        rep[f"{name}_rate_bytes_per_delta"] = \
+            sent / chunks_total * PAPER_BYTES["rate"]
+    subs = np.asarray(states["sparse"].subs)
+    rep["subs_per_rank_mean"] = float((subs != NO_SUB).sum()) / r
+    rep["dense_table_bytes_per_rank"] = r * n * PAPER_BYTES["rate"]
+    rep["subscription_overflow"] = \
+        float(states["sparse"].stats["subscription_overflow"].sum())
+    # the 4B request ids shipped alongside the pushed rates (dense: none)
+    reqs = float(states["sparse"].stats["subscription_requests"].sum())
+    rep["sparse_request_bytes_per_delta"] = \
+        reqs / chunks_total * PAPER_BYTES["rate"]
+    rep["rate_bytes_ratio"] = rep["dense_rate_bytes_per_delta"] / \
+        max(rep["sparse_rate_bytes_per_delta"], 1.0)
+    rep["total_bytes_ratio"] = rep["dense_rate_bytes_per_delta"] / \
+        max(rep["sparse_rate_bytes_per_delta"]
+            + rep["sparse_request_bytes_per_delta"], 1.0)
+    # the whole point: the push must ship strictly less than the broadcast
+    if r > 1:
+        assert rep["total_bytes_ratio"] > 1.0, rep["total_bytes_ratio"]
+    return rep, times
 
 
 def main():
-    n = int(sys.argv[1]) if len(sys.argv) > 1 else 256
+    smoke = "--smoke" in sys.argv
+    write_json = smoke or "--json" in sys.argv
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    n = int(args[0]) if args else (64 if smoke else 256)
     import jax
     r = len(jax.devices())
-    times = {}
-    for alg in ("old", "new"):
-        dt, st = brain_sim(dict(
-            neurons_per_rank=n, local_levels=3, frontier_cap=32,
-            max_synapses=16, connectivity_alg="new", spike_alg=alg,
-            rate_period=100, requests_cap_factor=max(r, 4)), chunks=2)
-        times[alg] = dt
+    rep, times = bench(n)
     emit(f"fig4_spikes_old_r{r}_n{n}", times["old"] * 1e6)
-    emit(f"fig4_spikes_new_r{r}_n{n}", times["new"] * 1e6,
-         f"speedup={times['old'] / times['new']:.2f}x")
+    emit(f"fig4_spikes_new_dense_r{r}_n{n}", times["dense"] * 1e6,
+         f"speedup={times['old'] / times['dense']:.2f}x "
+         f"rateB/Delta={rep['dense_rate_bytes_per_delta']:.0f}")
+    emit(f"fig4_spikes_new_sparse_r{r}_n{n}", times["sparse"] * 1e6,
+         f"rate+reqB/Delta={rep['sparse_rate_bytes_per_delta']:.0f}"
+         f"+{rep['sparse_request_bytes_per_delta']:.0f} "
+         f"({rep['total_bytes_ratio']:.1f}x less)")
+    if write_json:
+        # smoke output goes to its own file: reproducing the CI smoke step
+        # locally must not clobber the committed r=4/n=1024 baseline
+        out = "BENCH_spikes_smoke.json" if smoke else "BENCH_spikes.json"
+        report = {"smoke": smoke, f"r{r}_n{n}": rep}
+        with open(os.path.join(ROOT, out), "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
 
 
 if __name__ == "__main__":

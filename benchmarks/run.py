@@ -16,6 +16,9 @@ def main() -> None:
     rank_counts = (1, 2, 4, 8) if scaling else (4,)
     for r in rank_counts:
         sys.stdout.write(run_sub("benchmarks.bench_fig3_connectivity", r, 256))
+        # old vs new spike alg + dense vs sparse rate exchange (CSV only;
+        # refresh the committed BENCH_spikes.json baseline by running the
+        # module directly with 4 devices: bench_fig4_spikes 1024 --json)
         sys.stdout.write(run_sub("benchmarks.bench_fig4_spikes", r, 256))
     sys.stdout.write(run_sub("benchmarks.bench_fig5_lookup", 1, 4096))
     sys.stdout.write(run_sub("benchmarks.bench_tab12_bytes", 4, 256))

@@ -42,9 +42,21 @@ class BrainConfig:
     frontier_cap: int = 64             # static BH frontier size
     max_synapses: int = 32             # S_max per neuron (out and in)
     requests_cap_factor: int = 2       # all_to_all request buffer head-room
+    subs_cap_factor: int = 2           # sparse-exchange subscription head-room
     # --- algorithm selection (old = paper baseline, new = paper contribution) ---
     connectivity_alg: str = "new"      # 'old' (move data) | 'new' (move compute)
     spike_alg: str = "new"             # 'old' (per-step IDs) | 'new' (rates + PRNG)
+    # rate-exchange layout for spike_alg='new' (DESIGN.md §7):
+    #   'dense'  all_gather every rank's full rate vector into a replicated
+    #            (R, n) table — O(R*n) bytes per rank per Delta (reference);
+    #   'sparse' demand-driven push: each rank subscribes to the unique
+    #            remote sources of its in-edge table (registry rebuilt with
+    #            the connectome) and owners push only those rates —
+    #            O(unique remote sources) per Delta. Bit-identical to dense
+    #            while stats['subscription_overflow'] stays zero: overflowed
+    #            subscriptions read rate 0, so raise subs_cap_factor until
+    #            it does (like requests_cap_factor).
+    rate_exchange: str = "dense"
     # 'reference' = jnp scan (6 passes/step); 'fused' = one Pallas megakernel
     # per rate window, Delta-resident state (bit-identical; requires
     # spike_alg='new' and (s_max+16)*4*n bytes of VMEM — see DESIGN.md §5)

@@ -36,6 +36,53 @@ def cap_requests(cfg, num_ranks: int):
     return min(n, max(32, -(-per_dest // 8) * 8))
 
 
+def cap_subs(cfg, num_ranks: int):
+    """Subscription-registry capacity for the sparse rate exchange. The hard
+    ceiling is min(n * s_max, (R-1) * n) — a rank can never subscribe to more
+    unique remote sources than it has in-edge slots or than exist remotely.
+    ``subs_cap_factor`` scales the default head-room below that (tests and
+    benchmarks that require sparse == dense bit-identity raise it until
+    ``stats['request_overflow']`` stays zero, like requests_cap_factor)."""
+    n = cfg.neurons_per_rank
+    full = min(n * cfg.max_synapses, max(num_ranks - 1, 1) * n)
+    per = max(n // max(num_ranks, 1), 32) * cfg.subs_cap_factor
+    return min(full, max(32, -(-per // 8) * 8))
+
+
+def push_subscribed_rates(subs, rate, axis_name, num_ranks: int, n: int):
+    """Sparse exchange, per-Delta push: ship each rank's subscription
+    requests to the owner ranks (tiled all_to_all, once per connectivity
+    update — the registry only changes with the connectome) and have owners
+    answer with exactly the subscribed rates.
+
+    ``subs``: (subs_cap,) sorted unique remote gids (``spikes.NO_SUB`` pad);
+    ``rate``: (n,) this rank's advertised rates. Returns ``(remote_rates,
+    pushed)`` — the (subs_cap,) compact rate buffer aligned with ``subs``
+    (0.0 on pads) and the number of rate records actually pushed to this
+    rank (the real exchange volume, O(|subs|) instead of O(R·n))."""
+    from repro.core.spikes import NO_SUB
+    subs_cap = subs.shape[0]
+    valid = subs != NO_SUB
+    pushed = jnp.sum(valid).astype(jnp.float32)
+    if num_ranks == 1:
+        return jnp.zeros((subs_cap,), jnp.float32), pushed
+    owner = jnp.where(valid, subs // n, num_ranks)
+    # subs is sorted, so owners are contiguous; slot < subs_cap always holds
+    # (at most subs_cap valid entries total) — per-owner cap never overflows
+    slot = ctree.positions_within(owner, num_ranks + 1)
+    req = jnp.full((num_ranks, subs_cap), -1, jnp.int32)
+    req = req.at[jnp.where(valid, owner, num_ranks), slot].set(
+        jnp.where(valid, subs % n, -1), mode="drop")
+    req = jax.lax.all_to_all(req, axis_name, 0, 0, tiled=True)
+    # req[p, j] is now the local id rank p subscribed to — answer with rates
+    payload = jnp.where(req >= 0, rate[jnp.clip(req, 0, n - 1)], 0.0)
+    payload = jax.lax.all_to_all(payload, axis_name, 0, 0, tiled=True)
+    # payload[o, j] = rate of this rank's j-th request to owner o — realign
+    remote_rates = jnp.where(
+        valid, payload[jnp.where(valid, owner, 0), slot], 0.0)
+    return remote_rates, pushed
+
+
 def cap_deletions(cfg, lesions: bool = False):
     """Deletion-message buffer capacity. Lesion protocols retract EVERY edge
     of a dead neuron in one update, so the cap then scales with

@@ -6,7 +6,11 @@
       the replicated top tree, then the algorithm pair: 'old' downloads
       every subtree and searches locally, 'new' ships 42B requests to the
       owning rank (routing.py);
-  3c  rate refresh + Delta-periodic rate exchange.
+  3c  rate refresh + Delta-periodic rate exchange — 'dense' all-gathers the
+      replicated (R, n) table; 'sparse' rebuilds the subscription registry
+      from the just-updated in-edge table (subscriptions only change when
+      the connectome does) and owners push only the subscribed rates
+      (DESIGN.md §7).
 
 All scenario effects (lesion masks) apply before the algorithm branch, so
 old == new stays bit-identical under every protocol. Randomness: retraction
@@ -32,8 +36,9 @@ from repro.scenarios import protocol as proto
 def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
                         scenario=None):
     """One structural-plasticity update. ``state`` is the engine's BrainState
-    (any NamedTuple with neurons/out_edges/in_edges/positions/rates_table/
-    chunk/stats); returns it updated with chunk advanced."""
+    (any NamedTuple with neurons/out_edges/in_edges/positions, the
+    rate-exchange fields rates_table (dense) or subs/rate_slots/remote_rates
+    (sparse), chunk, and stats); returns it updated with chunk advanced."""
     if cfg.connectivity_impl not in ("reference", "fused"):
         raise ValueError(f"unknown connectivity_impl "
                          f"{cfg.connectivity_impl!r}; expected 'reference' "
@@ -145,15 +150,42 @@ def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
             + downloaded
         stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
 
+    # ---- rate refresh + Delta-periodic exchange (phase 3c) ---------------
     neurons = refresh_rate(state.neurons, cfg, alive)
+    rates_table = state.rates_table
+    subs, rate_slots = state.subs, state.rate_slots
+    remote_rates = state.remote_rates
     if cfg.spike_alg == "old":
-        # the rates table is dead state on the old spike path — skip the
-        # per-chunk all-gather (and its accounting) entirely
-        rates_table = state.rates_table
-    else:
+        # the rate state is dead on the old spike path — skip the per-chunk
+        # exchange (and its accounting) entirely
+        pass
+    elif cfg.rate_exchange == "dense":
         rates_table = spikes.exchange_rates(neurons.rate, axis_name,
                                             num_ranks)
-        stats["rates_sent"] = stats["rates_sent"] + float(n)
+        # every rank broadcasts its full n rates to the other R-1 ranks —
+        # rates_sent counts rate records actually shipped over the wire
+        stats["rates_sent"] = stats["rates_sent"] + \
+            float(n * max(num_ranks - 1, 0))
+    else:
+        # sparse: the subscription registry only changes when the connectome
+        # does, so it is rebuilt HERE, right after the synapse-table update
+        # (computation moves to the data); owners then push exactly the
+        # subscribed rates — O(unique remote sources) instead of O(R*n)
+        subs, rate_slots, ovf = spikes.build_subscriptions(
+            in_edges, rank, n, routing.cap_subs(cfg, num_ranks))
+        # counted both in the aggregate drop counter and in a dedicated key
+        # (benchmarks must not infer it from the shared aggregate)
+        stats["request_overflow"] = stats["request_overflow"] + ovf
+        stats["subscription_overflow"] = stats["subscription_overflow"] + ovf
+        remote_rates, pushed = routing.push_subscribed_rates(
+            subs, neurons.rate, axis_name, num_ranks, n)
+        # the exchange ships one 4B request id out AND one 4B rate back per
+        # subscription — both streams are counted (Tables I/II honesty)
+        stats["subscription_requests"] = stats["subscription_requests"] \
+            + pushed
+        stats["rates_sent"] = stats["rates_sent"] + pushed
     return state._replace(neurons=neurons, out_edges=out_edges,
                           in_edges=in_edges, rates_table=rates_table,
+                          subs=subs, rate_slots=rate_slots,
+                          remote_rates=remote_rates,
                           chunk=state.chunk + 1, stats=stats)

@@ -5,11 +5,16 @@ One *chunk* = rate_period (Delta=100) activity steps + one connectivity update
 rank-local inside shard_map over a 1-D 'ranks' mesh; the only cross-rank
 traffic is exactly the paper's:
 
-  old spikes : all-gather of sorted spiked-ID buffers, every step
-  new spikes : all-gather of rates, once per chunk
-  old conn.  : all-gather of every rank's subtree + leaf neuron data ("RMA
-               download with caching"), + 17B formation requests / 1B replies
-  new conn.  : 42B formation-and-calculation requests / 9B replies, all_to_all
+  old spikes   : all-gather of sorted spiked-ID buffers, every step
+  new spikes   : rate exchange, once per chunk — 'dense' all-gathers every
+                 rank's full (n,) rate vector into a replicated (R, n)
+                 table; 'sparse' all_to_alls subscription requests (unique
+                 remote in-edge sources, rebuilt with the connectome) and
+                 owners push only the subscribed rates (DESIGN.md §7)
+  old conn.    : all-gather of every rank's subtree + leaf neuron data ("RMA
+                 download with caching"), + 17B formation requests / 1B replies
+  new conn.    : 42B formation-and-calculation requests / 9B replies,
+                 all_to_all
 
 Counters for the paper's byte accounting (Tables I/II) are accumulated in
 state.stats; HLO-level collective bytes come from the roofline parser.
@@ -25,7 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.configs.msp_brain import BrainConfig
-from repro.connectome import init_synapses
+from repro.connectome import init_synapses, routing
 from repro.connectome.update import connectivity_update
 from repro.core import morton, spikes
 from repro.core.neuron import NeuronParams, NeuronState, init_neurons
@@ -35,17 +40,28 @@ from repro.scenarios import populations as pops
 from repro.scenarios import protocol as proto
 from repro.scenarios import regions as regions_mod
 
-STAT_KEYS = ("spikes_sent", "rates_sent", "bh_requests", "bh_responses",
+STAT_KEYS = ("spikes_sent", "rates_sent", "subscription_requests",
+             "subscription_overflow", "bh_requests", "bh_responses",
              "formation_requests", "synapses_formed", "synapses_deleted",
              "tree_nodes_downloaded", "request_overflow")
 
 
 class BrainState(NamedTuple):
+    """Engine state. The rate-exchange fields are layout-dependent
+    (cfg.rate_exchange): 'dense' holds the replicated all-gathered
+    ``rates_table`` and the sparse fields are None; 'sparse' drops the
+    table and holds the rank-sharded subscription registry instead."""
     neurons: NeuronState
     out_edges: jnp.ndarray
     in_edges: jnp.ndarray
     positions: jnp.ndarray
-    rates_table: jnp.ndarray     # (R, n) gathered rates (new alg)
+    rates_table: jnp.ndarray     # (R, n) gathered rates (dense) | None
+    subs: jnp.ndarray            # (subs_cap,) sorted unique remote source
+                                 # gids, NO_SUB pad (sparse) | None
+    rate_slots: jnp.ndarray      # (n, S) in-edge -> subs slot, -1 local/
+                                 # empty/overflow (sparse) | None
+    remote_rates: jnp.ndarray    # (subs_cap,) pushed rates aligned with
+                                 # subs (sparse) | None
     chunk: jnp.ndarray           # scalar i32
     stats: dict
 
@@ -58,6 +74,9 @@ def _neuron_params(table: "pops.PopulationTable") -> NeuronParams:
 # ================================================================ init
 def init_state(cfg: BrainConfig, rank, num_ranks: int,
                scenario=None) -> BrainState:
+    if cfg.rate_exchange not in ("dense", "sparse"):
+        raise ValueError(f"unknown rate_exchange {cfg.rate_exchange!r}; "
+                         f"expected 'dense' or 'sparse'")
     n = cfg.neurons_per_rank
     key = jax.random.fold_in(jax.random.key(cfg.seed), rank)
     kp, kn = jax.random.split(key)
@@ -70,8 +89,16 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int,
     syn = init_synapses(n, cfg.max_synapses)
     # (1,)-shaped per-rank counters: sharded over 'ranks', summed at read time
     stats = {k: jnp.zeros((1,), jnp.float32) for k in STAT_KEYS}
+    rates_table = subs = rate_slots = remote_rates = None
+    if cfg.rate_exchange == "dense":
+        rates_table = jnp.zeros((num_ranks, n), jnp.float32)
+    else:
+        cap = routing.cap_subs(cfg, num_ranks)
+        subs = jnp.full((cap,), spikes.NO_SUB, jnp.int32)
+        rate_slots = jnp.full((n, cfg.max_synapses), -1, jnp.int32)
+        remote_rates = jnp.zeros((cap,), jnp.float32)
     return BrainState(neurons, syn.out_edges, syn.in_edges, pos,
-                      jnp.zeros((num_ranks, n), jnp.float32),
+                      rates_table, subs, rate_slots, remote_rates,
                       jnp.zeros((), jnp.int32), stats)
 
 
@@ -115,6 +142,13 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
     if cfg.activity_impl not in ("reference", "fused"):
         raise ValueError(f"unknown activity_impl {cfg.activity_impl!r}; "
                          f"expected 'reference' or 'fused'")
+    # rate-exchange layout: dense reads the replicated (R, n) table with a
+    # 2-D (src rank, src lid) gather; sparse reads the compact per-rank
+    # subscribed-rate buffer through the (n, S) edge->slot remap
+    if cfg.rate_exchange == "sparse":
+        rates, rate_slots = state.remote_rates, state.rate_slots
+    else:
+        rates, rate_slots = state.rates_table, None
     if cfg.activity_impl == "fused":
         if cfg.spike_alg != "new":
             raise ValueError(
@@ -122,10 +156,10 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                 "algorithm exchanges spiked IDs every step (a collective), "
                 "which cannot run inside the megakernel")
         out = kops.fused_activity_window(
-            st7, state.in_edges, table.synapse_weight, state.rates_table,
+            st7, state.in_edges, table.synapse_weight, rates,
             bg_mean, bg_std, state.chunk, rank, seed=cfg.seed,
             num_steps=cfg.rate_period, izh=izh, ca_consts=ca_consts,
-            stim=stim, lesions=lesions)
+            stim=stim, lesions=lesions, rate_slots=rate_slots)
         neurons = ns._replace(v=out[0], u=out[1], calcium=out[2],
                               ax_elements=out[3], de_elements=out[4],
                               spiked=out[5], spike_count=out[6])
@@ -144,9 +178,10 @@ def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
         else:
             remote_in = None   # step_core reconstructs from the hash
         st = step_core(st, state.in_edges, table.synapse_weight,
-                       state.rates_table, bg_mean, bg_std, izh, ca_consts,
+                       rates, bg_mean, bg_std, izh, ca_consts,
                        cfg.seed, state.chunk * cfg.rate_period + t, rank, n,
-                       stim=stim, lesions=lesions, remote_override=remote_in)
+                       stim=stim, lesions=lesions, remote_override=remote_in,
+                       rate_slots=rate_slots)
         return (st, stats), None
 
     (out, stats), _ = jax.lax.scan(
@@ -191,6 +226,8 @@ def _state_specs(state, num_ranks):
                         for k in path)
         if "rates_table" in name or "chunk" in name:
             return P()  # replicated (all_gather result / scalar step counter)
+        # everything else — including the sparse-exchange subs/rate_slots/
+        # remote_rates registry — is rank-sharded on the leading dim
         return P("ranks", *([None] * (leaf.ndim - 1)))
     return jax.tree_util.tree_map_with_path(spec, state)
 
@@ -238,7 +275,9 @@ def lower_sim_step(cfg: BrainConfig, mesh):
         lambda l: jax.ShapeDtypeStruct(
             (l.shape[0] * num_ranks,) + l.shape[1:] if l.ndim >= 1 else
             l.shape, l.dtype), shapes)
-    # rates_table & the step counter are replicated (not concatenated)
+    # the dense rates_table & the step counter are replicated (not
+    # concatenated); sparse-mode registry fields are rank-sharded like the
+    # rest (and rates_table is None then — _replace is a no-op on it)
     global_shapes = global_shapes._replace(
         rates_table=shapes.rates_table, chunk=shapes.chunk)
     return chunk.lower(global_shapes)

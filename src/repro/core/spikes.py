@@ -7,13 +7,23 @@ receivers binary-search (searchsorted) each remote in-edge. Padded static
 buffers model the variable-length ID lists; the benchmarks count the paper's
 8 B/ID alongside the HLO buffer bytes.
 
-New (every Delta): ranks all-exchange per-neuron rates (4 B each); between
+New (every Delta): ranks exchange per-neuron rates (4 B each); between
 exchanges each receiver draws Bernoulli(rate) per remote edge from a
 counter-based hash keyed by ``(seed, step, edge)`` — no per-step
 synchronization at all, and (being pure integer math, ``kernels/hash.py``)
 the same stream is reproduced bit-for-bit by the fused activity megakernel
 and the jnp reference path. Local edges always see true spikes (the paper
 applies the approximation only across ranks).
+
+The new algorithm's exchange layout is ``BrainConfig.rate_exchange``:
+``dense`` all-gathers every rank's full rate vector into a replicated
+``(R, n)`` table; ``sparse`` derives a per-rank *subscription registry*
+(``build_subscriptions``: the sorted unique remote source gids of the
+in-edge table, plus the edge→slot remap) and owners push only the
+subscribed rates (``connectome.routing.push_subscribed_rates``) — O(unique
+remote sources) instead of O(R·n), bit-identical because the Bernoulli
+stream is keyed by the edge id, independent of where the rate came from
+(DESIGN.md §7).
 """
 from __future__ import annotations
 
@@ -75,14 +85,57 @@ def exchange_rates(rate, axis_name, num_ranks: int):
     return jax.lax.all_gather(rate, axis_name)          # (R, n)
 
 
-def reconstruct_spikes(seed: int, gstep, all_rates, in_edges, rank, n: int):
+NO_SUB = jnp.iinfo(jnp.int32).max   # registry pad (sorts after every gid)
+
+
+def build_subscriptions(in_edges, rank, n: int, subs_cap: int):
+    """Sparse exchange, receive side: derive this rank's subscription
+    registry from its in-edge table.
+
+    Returns ``(subs, rate_slots, overflow)``:
+
+      subs        (subs_cap,) i32 — the sorted unique REMOTE source gids this
+                  rank consumes, padded with ``NO_SUB``. Sorted ⇒ owner ranks
+                  are contiguous and slot lookup is a binary search;
+      rate_slots  (n, S) i32 — per in-edge index into ``subs`` (and into the
+                  compact pushed-rate buffer aligned with it); -1 for local,
+                  empty, or overflowed edges;
+      overflow    f32 scalar — unique remote sources that did not fit
+                  ``subs_cap`` (their edges see rate 0 until the registry has
+                  room; counted into ``stats['request_overflow']``).
+
+    Pure rank-local compute — subscriptions only change when the connectome
+    does, so this runs once per connectivity update (computation moves to
+    the data)."""
+    src = in_edges.reshape(-1)
+    remote = (src >= 0) & ((src // n) != rank)
+    s = jnp.sort(jnp.where(remote, src, NO_SUB))
+    first = (s != NO_SUB) & jnp.concatenate(
+        [jnp.ones((1,), bool), s[1:] != s[:-1]])
+    uidx = jnp.cumsum(first.astype(jnp.int32)) - 1
+    subs = jnp.full((subs_cap,), NO_SUB, jnp.int32)
+    subs = subs.at[jnp.where(first, uidx, subs_cap)].set(
+        jnp.where(first, s, NO_SUB), mode="drop")
+    n_unique = jnp.sum(first.astype(jnp.int32))
+    overflow = jnp.maximum(n_unique - subs_cap, 0).astype(jnp.float32)
+    # edge -> slot: binary-search each in-edge source in the registry
+    slot = jnp.clip(jnp.searchsorted(subs, in_edges).astype(jnp.int32),
+                    0, subs_cap - 1)
+    found = subs[slot] == in_edges
+    rem2 = (in_edges >= 0) & ((in_edges // n) != rank)
+    rate_slots = jnp.where(rem2 & found, slot, -1)
+    return subs, rate_slots, overflow
+
+
+def reconstruct_spikes(seed: int, gstep, all_rates, in_edges, rank, n: int,
+                       rate_slots=None):
     """NEW algorithm, receive side: Bernoulli(rate) per REMOTE edge, from
     the counter hash keyed by ``(seed, gstep, edge)``; local edges use true
     spikes (caller merges). Thin alias of the kernel-side implementation —
     the fused megakernel and this jnp path are the same code.
     Returns (n, S) bool for remote edges (False on local/empty)."""
     return reconstruct_remote_spikes(seed, gstep, all_rates, in_edges,
-                                     rank, n)
+                                     rank, n, rate_slots=rate_slots)
 
 
 def local_spikes(spiked_last, in_edges, rank, n: int):

@@ -27,8 +27,12 @@ which is what makes ``activity_impl='fused'`` bit-identical to
 TPU sizing: the window keeps the in-edge table and ~16 ``(n,)`` vectors
 VMEM-resident, i.e. roughly ``(s_max + 16) * 4 * n`` bytes — n = 64k at
 s_max = 32 is ~12.5 MB, the practical per-core ceiling. Beyond that, fall
-back to ``activity_impl='reference'``. Like the other kernels in this
-package, CPU containers run it with ``interpret=True``.
+back to ``activity_impl='reference'``. The dense rate exchange adds an
+``(R, n)`` rates operand on top — O(R·n) VMEM that cannot survive large
+meshes; the sparse exchange (``rate_slots`` given) replaces it with the
+compact ``(subs_cap,)`` subscribed-rate buffer plus an ``(n, s_max)`` slot
+remap (DESIGN.md §7). Like the other kernels in this package, CPU
+containers run it with ``interpret=True``.
 """
 from __future__ import annotations
 
@@ -56,19 +60,33 @@ def local_spike_hits(spiked_last, in_edges, rank, n: int):
 
 
 def reconstruct_remote_spikes(seed: int, gstep, all_rates, in_edges, rank,
-                              n: int):
+                              n: int, rate_slots=None):
     """NEW spike algorithm, receive side: Bernoulli(rate) per REMOTE edge
     from the counter hash keyed by ``(seed, SPIKE_DOMAIN, gstep,
     dst_gid*S + slot)``. The edge id derives from the receiver's table
     coordinates, so any rank holding the same edge table draws the same
-    stream. Returns (n, S) bool (False on local/empty edges)."""
+    stream. Returns (n, S) bool (False on local/empty edges).
+
+    ``rate_slots=None`` (dense exchange): ``all_rates`` is the replicated
+    (R, n) table, looked up by the edge's (src rank, src lid) — a 2-D
+    gather over the full table. Otherwise (sparse exchange): ``all_rates``
+    is the compact (subs_cap,) subscribed-rate buffer and ``rate_slots``
+    the (n, S) edge→slot remap — a 1-D gather; slot -1 (local, empty, or
+    overflowed subscription) reads rate 0. The Bernoulli stream is keyed by
+    the edge id either way, so both layouts draw identical spikes wherever
+    the subscription held the true rate (DESIGN.md §7)."""
     src = in_edges
     s_max = src.shape[1]
     valid = src >= 0
     src_rank = jnp.where(valid, src // n, 0)
     src_lid = jnp.where(valid, src % n, 0)
     remote = valid & (src_rank != rank)
-    rates = all_rates[src_rank, src_lid]
+    if rate_slots is None:
+        rates = all_rates[src_rank, src_lid]
+    else:
+        cap = all_rates.shape[0]
+        rates = jnp.where(rate_slots >= 0,
+                          all_rates[jnp.clip(rate_slots, 0, cap - 1)], 0.0)
     dst_gid = rank * n + jnp.arange(n, dtype=jnp.int32)
     edge_id = dst_gid[:, None] * s_max + jnp.arange(s_max, dtype=jnp.int32)
     u = chash.uniform(seed, chash.SPIKE_DOMAIN, gstep, edge_id)
@@ -77,7 +95,8 @@ def reconstruct_remote_spikes(seed: int, gstep, all_rates, in_edges, rank,
 
 def step_core(state, in_edges, w_table, rates, bg_mean, bg_std, izh,
               ca_consts, seed: int, gstep, rank, n: int,
-              stim=None, lesions=None, remote_override=None):
+              stim=None, lesions=None, remote_override=None,
+              rate_slots=None):
     """One electrical step, pure jnp — the single source of truth executed
     by the Pallas kernel body, the jnp oracle, and the engine's reference
     scan (bit-identity by construction).
@@ -87,7 +106,9 @@ def step_core(state, in_edges, w_table, rates, bg_mean, bg_std, izh,
     stim: ((E, n) f32 masks, ((amplitude, t0, t1), ...)) or None; lesions:
     ((W, n) bool masks, ((t0, t1), ...)) or None; remote_override: (n, S)
     bool remote-spike hits (old spike algorithm) or None to reconstruct
-    them from the counter hash."""
+    them from the counter hash; rate_slots: None when ``rates`` is the
+    dense (R, n) table, else the (n, S) edge→slot remap into the compact
+    (subs_cap,) subscribed-rate buffer (sparse exchange)."""
     v, u, ca, ax, de, spiked, spike_count = state
     a, b, c, d, nu, eps = izh
     ca_decay, ca_beta = ca_consts
@@ -96,7 +117,7 @@ def step_core(state, in_edges, w_table, rates, bg_mean, bg_std, izh,
     local_in = local_spike_hits(spiked, in_edges, rank, n)
     if remote_override is None:
         remote_in = reconstruct_remote_spikes(seed, gstep, rates, in_edges,
-                                              rank, n)
+                                              rank, n, rate_slots=rate_slots)
     else:
         remote_in = remote_override
     valid = in_edges >= 0
@@ -146,7 +167,7 @@ def step_core(state, in_edges, w_table, rates, bg_mean, bg_std, izh,
 
 
 def _window_kernel(*refs, n_in, num_steps, seed, ca_consts, n, stim_meta,
-                   lesion_meta):
+                   lesion_meta, has_slots):
     t = pl.program_id(0)
     outs = refs[n_in:n_in + _N_STATE]
 
@@ -156,15 +177,21 @@ def _window_kernel(*refs, n_in, num_steps, seed, ca_consts, n, stim_meta,
             o[...] = i[...]
 
     state = tuple(o[...] for o in outs)
-    in_edges = refs[_N_STATE][...]
-    w_table = refs[_N_STATE + 1][...]
-    rates = refs[_N_STATE + 2][...]
-    bg_mean = refs[_N_STATE + 3][...]
-    bg_std = refs[_N_STATE + 4][...]
-    izh = tuple(r[...] for r in refs[_N_STATE + 5:_N_STATE + 11])
-    scal = refs[_N_STATE + 11][...]
+    nxt = _N_STATE
+    in_edges = refs[nxt][...]
+    w_table = refs[nxt + 1][...]
+    rates = refs[nxt + 2][...]
+    nxt += 3
+    rate_slots = None
+    if has_slots:
+        rate_slots = refs[nxt][...]
+        nxt += 1
+    bg_mean = refs[nxt][...]
+    bg_std = refs[nxt + 1][...]
+    izh = tuple(r[...] for r in refs[nxt + 2:nxt + 8])
+    scal = refs[nxt + 8][...]
     chunk, rank = scal[0], scal[1]
-    nxt = _N_STATE + 12
+    nxt += 9
     stim = None
     if stim_meta is not None:
         stim = (refs[nxt][...], stim_meta)
@@ -176,21 +203,25 @@ def _window_kernel(*refs, n_in, num_steps, seed, ca_consts, n, stim_meta,
     gstep = chunk * num_steps + t
     new = step_core(state, in_edges, w_table, rates, bg_mean, bg_std, izh,
                     ca_consts, seed, gstep, rank, n,
-                    stim=stim, lesions=lesions)
+                    stim=stim, lesions=lesions, rate_slots=rate_slots)
     for o, val in zip(outs, new):
         o[...] = val
 
 
 def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
                     chunk, rank, *, seed: int, num_steps: int, izh,
-                    ca_consts, stim=None, lesions=None, interpret=False):
+                    ca_consts, stim=None, lesions=None, rate_slots=None,
+                    interpret=False):
     """Run ``num_steps`` electrical steps in one ``pallas_call``.
 
     state: 7-tuple (v, u, ca, ax, de, spiked (bool), spike_count), all (n,);
     in_edges: (n, s_max) i32; w_table: (n,) signed per-source weights;
-    rates: (R, n); bg_mean/bg_std: scalar or (n,); chunk/rank: traced i32
-    scalars; izh: 6-tuple, scalar or (n,); stim/lesions: protocol tables
-    (see ``scenarios.protocol.stim_tables``/``lesion_tables``).
+    rates: the dense (R, n) replicated table, or — with ``rate_slots``
+    (n, s_max) given — the compact (subs_cap,) subscribed-rate buffer of the
+    sparse exchange (the kernel then holds O(subs_cap) rate state in VMEM
+    instead of O(R·n)); bg_mean/bg_std: scalar or (n,); chunk/rank: traced
+    i32 scalars; izh: 6-tuple, scalar or (n,); stim/lesions: protocol
+    tables (see ``scenarios.protocol.stim_tables``/``lesion_tables``).
     Returns the updated 7-tuple (inputs donated via input_output_aliases)."""
     n = state[0].shape[0]
     s_max = in_edges.shape[1]
@@ -202,12 +233,18 @@ def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
                       jnp.asarray(rank, jnp.int32)])
 
     row = pl.BlockSpec((n,), lambda t: (0,))
-    operands = list(state) + [in_edges, w_table, rates, bg_mean, bg_std,
-                              *izh, scal]
+    operands = list(state) + [in_edges, w_table, rates]
     in_specs = [row] * _N_STATE + [
         pl.BlockSpec((n, s_max), lambda t: (0, 0)),       # in_edges
         row,                                              # w_table
-        pl.BlockSpec(rates.shape, lambda t: (0, 0)),      # rates
+        # rates: dense (R, n) table or sparse (subs_cap,) compact buffer
+        pl.BlockSpec(rates.shape, lambda t: (0,) * rates.ndim),
+    ]
+    if rate_slots is not None:
+        operands.append(rate_slots)
+        in_specs.append(pl.BlockSpec((n, s_max), lambda t: (0, 0)))
+    operands += [bg_mean, bg_std, *izh, scal]
+    in_specs += [
         row, row,                                         # bg_mean, bg_std
         *([row] * 6),                                     # izh
         pl.BlockSpec((2,), lambda t: (0,)),               # chunk, rank
@@ -228,7 +265,8 @@ def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
     kernel = functools.partial(
         _window_kernel, n_in=len(operands), num_steps=num_steps, seed=seed,
         ca_consts=(float(ca_consts[0]), float(ca_consts[1])), n=n,
-        stim_meta=stim_meta, lesion_meta=lesion_meta)
+        stim_meta=stim_meta, lesion_meta=lesion_meta,
+        has_slots=rate_slots is not None)
     return pl.pallas_call(
         kernel, grid=(num_steps,), in_specs=in_specs,
         out_specs=[row] * _N_STATE, out_shape=out_shape,
@@ -238,16 +276,25 @@ def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
 
 
 def window_hbm_bytes(n: int, s_max: int, num_ranks: int,
-                     num_stim: int = 0, num_lesions: int = 0) -> int:
+                     num_stim: int = 0, num_lesions: int = 0, *,
+                     subs_cap=None) -> int:
     """Analytic HBM traffic of one fused window on TPU: each operand is
     streamed HBM->VMEM once and the 7 state outputs written back once —
     there are no per-step HBM temporaries (that is the point). Used by
     ``benchmarks/bench_activity.py`` against the roofline byte count of the
-    reference lowering."""
+    reference lowering.
+
+    ``subs_cap=None`` models the dense exchange (the replicated (R, n)
+    rates table streams in); an integer models the sparse exchange (the
+    compact (subs_cap,) rate buffer plus the (n, s_max) slot remap)."""
     state_in = 6 * 4 * n + n                 # 6 f32 vectors + bool spiked
+    if subs_cap is None:
+        rate_bytes = num_ranks * n * 4       # dense (R, n) table
+    else:
+        rate_bytes = subs_cap * 4 + s_max * 4 * n   # compact buffer + slots
     tables = (s_max * 4 * n                  # in_edges
               + 4 * n                        # w_table
-              + num_ranks * n * 4            # rates
+              + rate_bytes
               + 2 * 4 * n                    # bg mean/std
               + 6 * 4 * n                    # izh params
               + 8                            # chunk, rank

@@ -63,12 +63,16 @@ def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
 
 def fused_activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
                           chunk, rank, *, seed, num_steps, izh, ca_consts,
-                          stim=None, lesions=None, interpret=None):
+                          stim=None, lesions=None, rate_slots=None,
+                          interpret=None):
     """Whole-rate-window activity megakernel (see kernels/activity_fused.py).
+    ``rate_slots`` selects the sparse-exchange operand layout (compact
+    subscribed-rate buffer + edge→slot remap instead of the (R, n) table).
     Not jitted here: it runs inside the engine's jitted shard_map."""
     if interpret is None:
         interpret = _interpret_default()
     return activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
                            chunk, rank, seed=seed, num_steps=num_steps,
                            izh=izh, ca_consts=ca_consts, stim=stim,
-                           lesions=lesions, interpret=interpret)
+                           lesions=lesions, rate_slots=rate_slots,
+                           interpret=interpret)

@@ -37,7 +37,7 @@ def bh_gauss_ref(x, y, w, *, sigma: float):
 
 def activity_window_ref(state, in_edges, w_table, rates, bg_mean, bg_std,
                         chunk, rank, *, seed: int, num_steps: int, izh,
-                        ca_consts, stim=None, lesions=None):
+                        ca_consts, stim=None, lesions=None, rate_slots=None):
     """jnp oracle for ``activity_fused.activity_window``: the same
     ``step_core`` math scanned over the window with ``jax.lax.scan``.
     The Pallas kernel must match this bit-for-bit in interpret mode
@@ -49,7 +49,7 @@ def activity_window_ref(state, in_edges, w_table, rates, bg_mean, bg_std,
     def step(carry, t):
         new = step_core(carry, in_edges, w_table, rates, bg_mean, bg_std,
                         izh, ca_consts, seed, chunk * num_steps + t, rank,
-                        n, stim=stim, lesions=lesions)
+                        n, stim=stim, lesions=lesions, rate_slots=rate_slots)
         return new, None
 
     out, _ = jax.lax.scan(step, tuple(state),

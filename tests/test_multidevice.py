@@ -121,6 +121,101 @@ def test_fused_activity_identical_across_ranks():
     assert "FUSED==REF" in out
 
 
+def test_sparse_rate_exchange_identical_across_ranks():
+    """Sparse subscription-based rate exchange == dense (R, n) all-gather,
+    bit for bit, on a 4-rank mesh for BOTH activity lowerings — the
+    demand-driven push ships the exact same f32 rates the dense table
+    holds, and the Bernoulli stream is keyed by the edge id, independent of
+    the exchange layout (DESIGN.md §7). Also asserts the exchange-volume
+    win the accounting reports."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.core import engine
+        base = BrainConfig(neurons_per_rank=32, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=25,
+                           requests_cap_factor=1000, subs_cap_factor=1000)
+        for impl in ['reference', 'fused']:
+            res = {}
+            for rex in ['dense', 'sparse']:
+                cfg = dataclasses.replace(base, rate_exchange=rex,
+                                          activity_impl=impl)
+                init_fn, chunk = engine.build_sim(cfg,
+                                                  engine.make_brain_mesh())
+                st = init_fn()
+                for _ in range(3):
+                    st = chunk(st)
+                res[rex] = st
+            a, b = res['dense'], res['sparse']
+            for f in ('v', 'u', 'calcium', 'rate', 'spike_count'):
+                assert np.array_equal(np.asarray(getattr(a.neurons, f)),
+                                      np.asarray(getattr(b.neurons, f))), \\
+                    (impl, f)
+            assert np.array_equal(np.asarray(a.in_edges),
+                                  np.asarray(b.in_edges)), impl
+            assert np.array_equal(np.asarray(a.out_edges),
+                                  np.asarray(b.out_edges)), impl
+            dense_sent = float(a.stats['rates_sent'].sum())
+            sparse_sent = float(b.stats['rates_sent'].sum())
+            assert float(b.stats['subscription_overflow'].sum()) == 0.0
+            assert 0 < sparse_sent < dense_sent, (dense_sent, sparse_sent)
+        print('SPARSE==DENSE', dense_sent / sparse_sent)
+    """, devices=4)
+    assert "SPARSE==DENSE" in out
+
+
+def test_sparse_rate_exchange_scenarios_identical():
+    """The sparse == dense contract under all 3 library scenarios
+    (populations, stimulation, lesion protocols) on a 4-rank mesh: the
+    registry rebuild sees lesion-retracted edge tables and dead neurons
+    advertising zero rates, and must still reproduce the dense state
+    exactly."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.core import engine
+        from repro.scenarios import Lesion, Recover, Stimulate, library
+        base = BrainConfig(neurons_per_rank=32, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=25,
+                           requests_cap_factor=1000, subs_cap_factor=1000,
+                           activity_impl='fused')
+        def scaled(scn, div=20):
+            evs = []
+            for e in scn.events:
+                if isinstance(e, Stimulate):
+                    evs.append(dataclasses.replace(
+                        e, t0=e.t0 // div,
+                        t1=max(e.t1 // div, e.t0 // div + 10)))
+                elif isinstance(e, (Lesion, Recover)):
+                    evs.append(dataclasses.replace(e, t=e.t // div))
+            return dataclasses.replace(scn, events=tuple(evs))
+        for name in sorted(library.SCENARIOS):
+            scn = scaled(library.get_scenario(name))
+            res = {}
+            for rex in ['dense', 'sparse']:
+                cfg = dataclasses.replace(base, rate_exchange=rex)
+                init_fn, chunk = engine.build_sim(
+                    cfg, engine.make_brain_mesh(), scenario=scn)
+                st = init_fn()
+                for _ in range(3):
+                    st = chunk(st)
+                res[rex] = st
+            a, b = res['dense'], res['sparse']
+            for f in ('v', 'u', 'calcium', 'rate'):
+                assert np.array_equal(np.asarray(getattr(a.neurons, f)),
+                                      np.asarray(getattr(b.neurons, f))), \\
+                    (name, f)
+            assert np.array_equal(np.asarray(a.in_edges),
+                                  np.asarray(b.in_edges)), name
+            assert np.array_equal(np.asarray(a.out_edges),
+                                  np.asarray(b.out_edges)), name
+        print('SCENARIOS SPARSE==DENSE')
+    """, devices=4)
+    assert "SCENARIOS SPARSE==DENSE" in out
+
+
 def test_fused_connectivity_identical_across_ranks():
     """The Pallas traversal kernel == the reference phase-B bit-for-bit on a
     real multi-rank mesh (42B request routing, nonzero gid_base, gathered
