@@ -51,21 +51,18 @@ PAPER_BYTES = {
 
 
 def brain_sim(cfg_overrides, chunks=2, stats_only=False):
-    """Build + run the brain sim on whatever devices exist; returns
-    (time_per_chunk_s, final_state)."""
-    import dataclasses
+    """Build + run the brain sim on whatever devices exist, through the
+    ``repro.sim.Simulator`` facade; returns (time_per_chunk_s, final_state)."""
     import jax
     from repro.configs.msp_brain import BrainConfig
-    from repro.core import engine
+    from repro.sim import Simulator
     cfg = BrainConfig(**cfg_overrides)
-    mesh = engine.make_brain_mesh()
-    init_fn, chunk = engine.build_sim(cfg, mesh)
-    st = init_fn()
-    st = chunk(st)  # warmup/compile + first plasticity round
+    sim = Simulator.from_config(cfg)
+    st = sim.step()  # warmup/compile + first plasticity round
     jax.block_until_ready(st.positions)
     t0 = time.perf_counter()
     for _ in range(chunks):
-        st = chunk(st)
+        st = sim.step()
     jax.block_until_ready(st.positions)
     dt = (time.perf_counter() - t0) / chunks
     return dt, st

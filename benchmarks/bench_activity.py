@@ -30,16 +30,21 @@ from repro.configs.msp_brain import BrainConfig
 from repro.core import engine
 from repro.kernels.activity_fused import window_hbm_bytes
 from repro.launch import roofline
+from repro.sim import Simulator
+from repro.sim import phases as sim_phases
 
 
 def make_activity_fn(cfg, mesh):
+    """Standalone activity-phase step (no connectivity update) through the
+    facade's PhaseContext + registry dispatch."""
     num_ranks = mesh.shape["ranks"]
     shapes = jax.eval_shape(lambda: engine.init_state(cfg, 0, num_ranks))
-    specs = engine._state_specs(shapes, num_ranks)
+    specs = engine.state_specs(shapes)
 
     def body(st):
-        rank = jax.lax.axis_index("ranks")
-        return engine.activity_phase(st, cfg, rank, "ranks", num_ranks)
+        ctx = sim_phases.make_context(cfg, jax.lax.axis_index("ranks"),
+                                      "ranks", num_ranks)
+        return sim_phases.activity_phase(st, ctx)
 
     return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(specs,),
                                     out_specs=specs, check_vma=False))
@@ -53,8 +58,7 @@ def main():
     delta = base.rate_period
 
     # one plasticity round first so the edge tables/rates are representative
-    init_fn, chunk = engine.build_sim(base, mesh)
-    st = chunk(init_fn())
+    st = Simulator.from_config(base, mesh=mesh).step()
     jax.block_until_ready(st.positions)
 
     report = {"n_per_rank": n, "s_max": base.max_synapses,

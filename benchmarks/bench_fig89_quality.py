@@ -15,9 +15,8 @@ def main():
     import dataclasses
     import jax
     from repro.configs.msp_brain import BrainConfig
-    from repro.core import engine
+    from repro.sim import Simulator
 
-    import jax
     ndev = len(jax.devices())
     # paper: 32 neurons SPREAD ACROSS RANKS (one per rank at 32 ranks) so the
     # rate approximation is fully exercised; here 32 total over ndev ranks
@@ -27,11 +26,9 @@ def main():
     marks = [chunks // 4, chunks // 2, 3 * chunks // 4, chunks]
     for alg in ("old", "new"):
         cfg = dataclasses.replace(base, spike_alg=alg)
-        mesh = engine.make_brain_mesh()
-        init_fn, chunk = engine.build_sim(cfg, mesh)
-        st = init_fn()
+        sim = Simulator.from_config(cfg)
         for i in range(1, chunks + 1):
-            st = chunk(st)
+            st = sim.step()
             if i in marks:
                 ca = np.asarray(st.neurons.calcium)
                 q1, med, q3 = np.percentile(ca, [25, 50, 75])

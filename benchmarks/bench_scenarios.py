@@ -17,17 +17,15 @@ from benchmarks._util import emit
 
 def _run(scn, cfg, num_chunks):
     import jax
-    from repro.core import engine
-    from repro.scenarios import library, observables, protocol
-    mesh = engine.make_brain_mesh()
-    init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scn)
-    st = init_fn()
-    st = chunk(st)  # compile + first round
+    from repro.scenarios import observables, protocol
+    from repro.sim import Simulator
+    sim = Simulator.from_config(cfg, scenario=scn)
+    st = sim.step()  # compile + first round
     jax.block_until_ready(st.positions)
     rec = observables.init_recorder(num_chunks, len(scn.regions) + 1)
     t0 = time.perf_counter()
     for i in range(num_chunks):
-        st = chunk(st)
+        st = sim.step()
         alive = protocol.alive_mask(scn.events, scn.regions, st.positions,
                                     (i + 2) * cfg.rate_period) \
             if scn.events else None
@@ -73,16 +71,12 @@ def main():
                  f"rest {post[1]:.0f}->{after[1]:.0f} ok={regrown}")
 
     # --- bit-identity: old vs new connectivity under focal_stimulation ----
-    from repro.core import engine
+    from repro.sim import Simulator
     scn = library.get_scenario("focal_stimulation")
     edge_tables = {}
     for alg in ("old", "new"):
         c = dataclasses.replace(cfg, connectivity_alg=alg, spike_alg="old")
-        init_fn, chunk = engine.build_sim(c, engine.make_brain_mesh(),
-                                          scenario=scn)
-        st = init_fn()
-        for _ in range(6):
-            st = chunk(st)
+        st = Simulator.from_config(c, scenario=scn).run(6)
         edge_tables[alg] = (np.sort(np.asarray(st.out_edges), 1),
                             np.sort(np.asarray(st.in_edges), 1))
     identical = all(np.array_equal(edge_tables["old"][i],

@@ -15,7 +15,7 @@ CODE = r"""
 import dataclasses, time, sys
 import jax
 from repro.configs.msp_brain import BrainConfig
-from repro.core import engine
+from repro.sim import Simulator
 from benchmarks._util import paper_bytes_from_stats
 
 r = len(jax.devices())
@@ -23,12 +23,12 @@ for conn, spike in (("old", "old"), ("new", "new")):
     cfg = BrainConfig(neurons_per_rank=256, local_levels=3, frontier_cap=32,
                       max_synapses=16, connectivity_alg=conn, spike_alg=spike,
                       requests_cap_factor=1)
-    init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh())
-    st = init_fn(); st = chunk(st)
+    sim = Simulator.from_config(cfg)
+    st = sim.step()   # compile + first plasticity round
     jax.block_until_ready(st.positions)
     t0 = time.time()
     for _ in range(2):
-        st = chunk(st)
+        st = sim.step()
     jax.block_until_ready(st.positions)
     dt = (time.time() - t0) / 2
     b, s = paper_bytes_from_stats(st.stats, conn, spike, r)

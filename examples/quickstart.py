@@ -1,7 +1,8 @@
-"""Quickstart: the paper's MSP brain simulation on CPU, comparing the OLD
-(download remote subtrees + per-step spike IDs) and NEW (location-aware
-requests + Delta-periodic rates) algorithm pairs at small scale, then showing
-the homeostatic loop drive calcium toward the target.
+"""Quickstart: the paper's MSP brain simulation on CPU through the
+``repro.sim.Simulator`` facade, comparing the OLD (download remote
+subtrees + per-step spike IDs) and NEW (location-aware requests +
+Delta-periodic rates) algorithm pairs at small scale, then showing the
+homeostatic loop drive calcium toward the target.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -14,7 +15,7 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 
 from repro.configs.msp_brain import BrainConfig  # noqa: E402
-from repro.core import engine  # noqa: E402
+from repro.sim import Simulator  # noqa: E402
 
 
 def main():
@@ -24,29 +25,24 @@ def main():
     print("== algorithm comparison (1 rank, 64 neurons, 3 plasticity rounds) ==")
     for conn, spike in (("old", "old"), ("new", "new")):
         cfg = dataclasses.replace(base, connectivity_alg=conn, spike_alg=spike)
-        init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh())
-        st = init_fn()
+        sim = Simulator.from_config(cfg)
         t0 = time.time()
-        for _ in range(3):
-            st = chunk(st)
-        jax.block_until_ready(st.positions)
-        s = {k: float(v.sum()) for k, v in st.stats.items()}
+        sim.run(3)                       # ONE jitted scan over the 3 chunks
+        jax.block_until_ready(sim.state.positions)
+        s = sim.stats()
         print(f"  {conn}/{spike}: {time.time() - t0:5.1f}s  "
               f"synapses={s['synapses_formed']:.0f}  "
               f"tree_nodes_downloaded={s['tree_nodes_downloaded']:.0f}  "
               f"spike_ids_sent={s['spikes_sent']:.0f}")
 
     print("== homeostasis: calcium -> target 0.7 (paper Figs 8/9 dynamics) ==")
-    cfg = base
-    init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh())
-    st = init_fn()
-    for i in range(40):
-        st = chunk(st)
-        if (i + 1) % 10 == 0:
-            ca = float(st.neurons.calcium.mean())
-            syn = float((st.in_edges >= 0).sum()) / cfg.neurons_per_rank
-            print(f"  step {100 * (i + 1):5d}: calcium={ca:.3f} "
-                  f"(target {cfg.target_calcium}) synapses/neuron={syn:.1f}")
+    sim = Simulator.from_config(base)
+    for i in range(4):
+        st = sim.run(10)                 # the run(10) scan compiles once
+        ca = float(st.neurons.calcium.mean())
+        syn = float((st.in_edges >= 0).sum()) / base.neurons_per_rank
+        print(f"  step {100 * 10 * (i + 1):5d}: calcium={ca:.3f} "
+              f"(target {base.target_calcium}) synapses/neuron={syn:.1f}")
 
 
 if __name__ == "__main__":

@@ -69,6 +69,14 @@ class BrainConfig:
     connectivity_impl: str = "reference"
     seed: int = 0
 
+    def __post_init__(self):
+        # eager validation through the phase registry: unknown variant
+        # names and illegal combinations (e.g. fused activity with the old
+        # spike algorithm) fail HERE, at construction, with the allowed
+        # set listed — never mid-trace (repro/sim/registry.py)
+        from repro.sim import registry
+        registry.check_config(self)
+
 
 SMOKE_CONFIG = BrainConfig(neurons_per_rank=64, local_levels=3, frontier_cap=32,
                            max_synapses=8)

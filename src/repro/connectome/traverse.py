@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import morton
 from repro.kernels import hash as chash
+from repro.sim import registry
 
 NEG = -1e30
 PAD = 8   # coordinate lanes (3 -> 8), the bh_gauss MXU alignment
@@ -324,14 +325,36 @@ def phase_b_core(counts, cents, leaf_members, neuron_pos, vacant_d, x,
     return jnp.where(ok, tgt_gid, -1), ok
 
 
+@registry.register_phase("traversal", "reference")
+def phase_b_reference(stacked, local, neuron_pos, vacant_d, pos,
+                      start_cell_rel, src_gid, valid_in, chunk, gid_base,
+                      kw, interpret=None):
+    """The jnp ``phase_b_core`` over the full query batch."""
+    return phase_b_core(stacked.counts, stacked.centroids,
+                        local.leaf_members, neuron_pos, vacant_d, pos,
+                        start_cell_rel, src_gid, valid_in, chunk, gid_base,
+                        **kw)
+
+
+@registry.register_phase("traversal", "fused")
+def phase_b_fused(stacked, local, neuron_pos, vacant_d, pos,
+                  start_cell_rel, src_gid, valid_in, chunk, gid_base, kw,
+                  interpret=None):
+    """The Pallas traversal kernel (kernels/bh_traverse.py), query-blocked,
+    same core math — bit-identical to the reference."""
+    from repro.kernels import ops as kops   # lazy: kernels import us
+    return kops.bh_traverse(
+        stacked.counts, stacked.centroids, local.leaf_members,
+        neuron_pos, vacant_d, pos, start_cell_rel, src_gid, valid_in,
+        chunk, gid_base, interpret=interpret, **kw)
+
+
 def phase_b(local, neuron_pos, vacant_d, pos, src_gid, start_cell_rel,
             valid_in, cfg, num_ranks: int, gid_base, *, chunk,
             interpret=None):
-    """Phase-B dispatch per ``cfg.connectivity_impl``:
-
-      'reference'  the jnp ``phase_b_core`` over the full query batch;
-      'fused'      the Pallas traversal kernel (kernels/bh_traverse.py),
-                   query-blocked, same core math — bit-identical.
+    """Phase-B dispatch per ``cfg.connectivity_impl`` (phase-registry
+    domain "traversal"): 'reference' vs 'fused' — bit-identical lowerings
+    of the same core math.
 
     local: a tree.LocalTree (or the gathered global tree in the old
     algorithm, with gid_base = 0 and global leaf members)."""
@@ -340,13 +363,6 @@ def phase_b(local, neuron_pos, vacant_d, pos, src_gid, start_cell_rel,
     kw = dict(seed=cfg.seed, sizes=stacked.sizes, theta=cfg.theta,
               sigma=cfg.sigma, frontier=cfg.frontier_cap,
               n_levels=cfg.local_levels + 1)
-    if cfg.connectivity_impl == "fused":
-        from repro.kernels import ops as kops   # lazy: kernels import us
-        return kops.bh_traverse(
-            stacked.counts, stacked.centroids, local.leaf_members,
-            neuron_pos, vacant_d, pos, start_cell_rel, src_gid, valid_in,
-            chunk, gid_base, interpret=interpret, **kw)
-    return phase_b_core(stacked.counts, stacked.centroids,
-                        local.leaf_members, neuron_pos, vacant_d, pos,
-                        start_cell_rel, src_gid, valid_in, chunk, gid_base,
-                        **kw)
+    impl = registry.resolve("traversal", cfg.connectivity_impl)
+    return impl(stacked, local, neuron_pos, vacant_d, pos, start_cell_rel,
+                src_gid, valid_in, chunk, gid_base, kw, interpret=interpret)

@@ -3,14 +3,14 @@
   3a  deletion by retraction — element loss breaks bound synapses, partners
       are notified via routed messages and regain vacant elements;
   3b  formation — octree build, branch-node exchange, phase-A search over
-      the replicated top tree, then the algorithm pair: 'old' downloads
-      every subtree and searches locally, 'new' ships 42B requests to the
-      owning rank (routing.py);
-  3c  rate refresh + Delta-periodic rate exchange — 'dense' all-gathers the
-      replicated (R, n) table; 'sparse' rebuilds the subscription registry
-      from the just-updated in-edge table (subscriptions only change when
-      the connectome does) and owners push only the subscribed rates
-      (DESIGN.md §7).
+      the replicated top tree, then the algorithm pair (phase registry
+      domain "connectivity"): 'old' downloads every subtree and searches
+      locally, 'new' ships 42B requests to the owning rank (routing.py);
+  3c  rate refresh + Delta-periodic rate exchange (registry domain
+      "rate_exchange") — 'dense' all-gathers the replicated (R, n) table;
+      'sparse' rebuilds the subscription registry from the just-updated
+      in-edge table (subscriptions only change when the connectome does)
+      and owners push only the subscribed rates (DESIGN.md §7).
 
 All scenario effects (lesion masks) apply before the algorithm branch, so
 old == new stays bit-identical under every protocol. Randomness: retraction
@@ -31,18 +31,99 @@ from repro.connectome import tree as ctree
 from repro.core import morton, spikes
 from repro.core.neuron import refresh_rate
 from repro.scenarios import protocol as proto
+from repro.sim import registry
 
 
-def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
-                        scenario=None):
-    """One structural-plasticity update. ``state`` is the engine's BrainState
-    (any NamedTuple with neurons/out_edges/in_edges/positions, the
-    rate-exchange fields rates_table (dense) or subs/rate_slots/remote_rates
-    (sparse), chunk, and stats); returns it updated with chunk advanced."""
-    if cfg.connectivity_impl not in ("reference", "fused"):
-        raise ValueError(f"unknown connectivity_impl "
-                         f"{cfg.connectivity_impl!r}; expected 'reference' "
-                         f"or 'fused'")
+# ---------------------------------------------------------------- formation
+@registry.register_phase("connectivity", "new")
+def formation_phase_new(ctx, state, local_tree, vac_d_pos, out_edges,
+                        in_edges, gids, branch_cell, owner, start_rel,
+                        valid_a, k_accept, stats):
+    """Paper's NEW algorithm: ship 42B formation-and-calculation requests
+    to the rank that owns the target subtree (move compute to the data)."""
+    tgt_gid, accept, ovf = routing.formation_new(
+        ctx.cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
+        branch_cell, owner, start_rel, valid_a, ctx.rank, ctx.axis_name,
+        ctx.num_ranks, k_accept, state.chunk)
+    in_edges = accept.pop("in_edges")
+    stats = dict(stats)
+    stats["request_overflow"] = stats["request_overflow"] + ovf
+    stats["bh_responses"] = stats["bh_responses"] + jnp.sum(
+        accept["accepted"])
+    out_edges = syn.add_out_edges(out_edges, tgt_gid, accept["accepted"])
+    stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(
+        accept["accepted"])
+    return out_edges, in_edges, stats
+
+
+@registry.register_phase("connectivity", "old")
+def formation_phase_old(ctx, state, local_tree, vac_d_pos, out_edges,
+                        in_edges, gids, branch_cell, owner, start_rel,
+                        valid_a, k_accept, stats):
+    """Paper's OLD baseline: download every remote subtree + leaf neuron
+    data ("RMA download with caching") and finish the search locally."""
+    tgt_gid, accepted, new_in, downloaded = routing.formation_old(
+        ctx.cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
+        branch_cell, valid_a, ctx.rank, ctx.axis_name, ctx.num_ranks,
+        k_accept, state.chunk)
+    out_edges = syn.add_out_edges(out_edges, tgt_gid, accepted)
+    stats = dict(stats)
+    stats["tree_nodes_downloaded"] = stats["tree_nodes_downloaded"] \
+        + downloaded
+    stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
+    return out_edges, new_in, stats
+
+
+# ---------------------------------------------------------------- exchange
+@registry.register_phase("rate_exchange", "dense")
+def exchange_dense(ctx, state, neurons, in_edges, stats):
+    """All-gather every rank's full (n,) rate vector into the replicated
+    (R, n) table — O(R*n) bytes per rank per Delta (reference layout)."""
+    n = ctx.cfg.neurons_per_rank
+    rates_table = spikes.exchange_rates(neurons.rate, ctx.axis_name,
+                                        ctx.num_ranks)
+    # every rank broadcasts its full n rates to the other R-1 ranks —
+    # rates_sent counts rate records actually shipped over the wire
+    stats = dict(stats, rates_sent=stats["rates_sent"]
+                 + float(n * max(ctx.num_ranks - 1, 0)))
+    return rates_table, state.subs, state.rate_slots, state.remote_rates, \
+        stats
+
+
+@registry.register_phase("rate_exchange", "sparse")
+def exchange_sparse(ctx, state, neurons, in_edges, stats):
+    """Demand-driven push: rebuild the subscription registry from the
+    just-updated in-edge table (subscriptions only change when the
+    connectome does — computation moves to the data), then owners push
+    exactly the subscribed rates — O(unique remote sources) instead of
+    O(R*n)."""
+    cfg, n = ctx.cfg, ctx.cfg.neurons_per_rank
+    stats = dict(stats)
+    subs, rate_slots, ovf = spikes.build_subscriptions(
+        in_edges, ctx.rank, n, routing.cap_subs(cfg, ctx.num_ranks))
+    # counted both in the aggregate drop counter and in a dedicated key
+    # (benchmarks must not infer it from the shared aggregate)
+    stats["request_overflow"] = stats["request_overflow"] + ovf
+    stats["subscription_overflow"] = stats["subscription_overflow"] + ovf
+    remote_rates, pushed = routing.push_subscribed_rates(
+        subs, neurons.rate, ctx.axis_name, ctx.num_ranks, n)
+    # the exchange ships one 4B request id out AND one 4B rate back per
+    # subscription — both streams are counted (Tables I/II honesty)
+    stats["subscription_requests"] = stats["subscription_requests"] + pushed
+    stats["rates_sent"] = stats["rates_sent"] + pushed
+    return state.rates_table, subs, rate_slots, remote_rates, stats
+
+
+# ---------------------------------------------------------------- update
+def connectivity_update(state, ctx):
+    """One structural-plasticity update. ``state`` is the engine's
+    BrainState (any NamedTuple with neurons/out_edges/in_edges/positions,
+    the rate-exchange fields rates_table (dense) or subs/rate_slots/
+    remote_rates (sparse), chunk, and stats); ``ctx`` a
+    ``repro.sim.phases.PhaseContext``. Returns the state updated with chunk
+    advanced."""
+    cfg, rank = ctx.cfg, ctx.rank
+    axis_name, num_ranks = ctx.axis_name, ctx.num_ranks
     n = cfg.neurons_per_rank
     # chunk_key is rank-independent: every rank derives the same stream, so
     # per-(gid) sub-streams are reproducible wherever the computation runs —
@@ -55,10 +136,9 @@ def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
     # lesion mask at the update instant (the step right after this chunk's
     # activity scan). Applied BEFORE the algorithm branch so 'old' and 'new'
     # see identical inputs — the bit-identity invariant holds per protocol.
-    events = scenario.events if scenario is not None else ()
-    alive = proto.alive_mask(events, scenario.regions, state.positions,
+    alive = proto.alive_mask(ctx.events, ctx.regions, state.positions,
                              (state.chunk + 1) * cfg.rate_period) \
-        if events else None
+        if ctx.events else None
     if alive is not None:
         # dead neurons lose all synaptic elements -> full retraction below,
         # partners are notified and regain vacant elements
@@ -81,7 +161,7 @@ def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
         jnp.sum(kill_out) + jnp.sum(kill_in)
 
     # notify partners; kill masks index the PRE-retraction tables
-    lesions = proto.has_lesions(scenario)
+    lesions = proto.has_lesions(ctx.scenario)
     msgs_out, ovf_out = routing.route_deletions(
         kill_out, state.out_edges, gids[:, None], cfg, axis_name, num_ranks,
         lesions)
@@ -126,64 +206,22 @@ def connectivity_update(state, cfg, rank, axis_name, num_ranks: int,
     stats["formation_requests"] = stats["formation_requests"] + jnp.sum(
         valid_a)
 
-    if cfg.connectivity_alg == "new":
-        tgt_gid, accept, ovf = routing.formation_new(
-            cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
-            branch_cell, owner, start_rel, valid_a, rank, axis_name,
-            num_ranks, k_accept, state.chunk)
-        in_edges_new = accept.pop("in_edges")
-        stats["request_overflow"] = stats["request_overflow"] + ovf
-        stats["bh_responses"] = stats["bh_responses"] + jnp.sum(
-            accept["accepted"])
-        out_edges = syn.add_out_edges(out_edges, tgt_gid, accept["accepted"])
-        in_edges = in_edges_new
-        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(
-            accept["accepted"])
-    else:
-        tgt_gid, accepted, new_in, downloaded = routing.formation_old(
-            cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
-            branch_cell, valid_a, rank, axis_name, num_ranks, k_accept,
-            state.chunk)
-        out_edges = syn.add_out_edges(out_edges, tgt_gid, accepted)
-        in_edges = new_in
-        stats["tree_nodes_downloaded"] = stats["tree_nodes_downloaded"] \
-            + downloaded
-        stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
+    formation = registry.resolve("connectivity", cfg.connectivity_alg)
+    out_edges, in_edges, stats = formation(
+        ctx, state, local_tree, vac_d_pos, out_edges, in_edges, gids,
+        branch_cell, owner, start_rel, valid_a, k_accept, stats)
 
     # ---- rate refresh + Delta-periodic exchange (phase 3c) ---------------
     neurons = refresh_rate(state.neurons, cfg, alive)
     rates_table = state.rates_table
     subs, rate_slots = state.subs, state.rate_slots
     remote_rates = state.remote_rates
-    if cfg.spike_alg == "old":
-        # the rate state is dead on the old spike path — skip the per-chunk
-        # exchange (and its accounting) entirely
-        pass
-    elif cfg.rate_exchange == "dense":
-        rates_table = spikes.exchange_rates(neurons.rate, axis_name,
-                                            num_ranks)
-        # every rank broadcasts its full n rates to the other R-1 ranks —
-        # rates_sent counts rate records actually shipped over the wire
-        stats["rates_sent"] = stats["rates_sent"] + \
-            float(n * max(num_ranks - 1, 0))
-    else:
-        # sparse: the subscription registry only changes when the connectome
-        # does, so it is rebuilt HERE, right after the synapse-table update
-        # (computation moves to the data); owners then push exactly the
-        # subscribed rates — O(unique remote sources) instead of O(R*n)
-        subs, rate_slots, ovf = spikes.build_subscriptions(
-            in_edges, rank, n, routing.cap_subs(cfg, num_ranks))
-        # counted both in the aggregate drop counter and in a dedicated key
-        # (benchmarks must not infer it from the shared aggregate)
-        stats["request_overflow"] = stats["request_overflow"] + ovf
-        stats["subscription_overflow"] = stats["subscription_overflow"] + ovf
-        remote_rates, pushed = routing.push_subscribed_rates(
-            subs, neurons.rate, axis_name, num_ranks, n)
-        # the exchange ships one 4B request id out AND one 4B rate back per
-        # subscription — both streams are counted (Tables I/II honesty)
-        stats["subscription_requests"] = stats["subscription_requests"] \
-            + pushed
-        stats["rates_sent"] = stats["rates_sent"] + pushed
+    if cfg.spike_alg != "old":
+        # (on the old spike path the rate state is dead — skip the
+        # per-chunk exchange and its accounting entirely)
+        exchange = registry.resolve("rate_exchange", cfg.rate_exchange)
+        rates_table, subs, rate_slots, remote_rates, stats = exchange(
+            ctx, state, neurons, in_edges, stats)
     return state._replace(neurons=neurons, out_edges=out_edges,
                           in_edges=in_edges, rates_table=rates_table,
                           subs=subs, rate_slots=rate_slots,

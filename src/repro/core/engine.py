@@ -1,4 +1,5 @@
-"""MSP simulation engine: the paper's three-phase loop under jax.shard_map.
+"""MSP simulation engine: state, init, and sharding for the paper's
+three-phase loop under jax.shard_map.
 
 One *chunk* = rate_period (Delta=100) activity steps + one connectivity update
 (the paper uses the same cadence: plasticity every 100th step). All state is
@@ -18,6 +19,13 @@ traffic is exactly the paper's:
 
 Counters for the paper's byte accounting (Tables I/II) are accumulated in
 state.stats; HLO-level collective bytes come from the roofline parser.
+
+The phase implementations live in ``repro.sim.phases`` (selected through
+the phase registry; DESIGN.md §8) and the user-facing driver is
+``repro.sim.api.Simulator``. This module keeps the state definition,
+sharded init, the per-field PartitionSpecs, and thin compat shims
+(``build_sim``, ``activity_phase``, ``connectivity_phase``, ``sim_chunk``)
+with the pre-facade signatures.
 """
 from __future__ import annotations
 
@@ -28,17 +36,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro import compat
 from repro.configs.msp_brain import BrainConfig
 from repro.connectome import init_synapses, routing
-from repro.connectome.update import connectivity_update
 from repro.core import morton, spikes
 from repro.core.neuron import NeuronParams, NeuronState, init_neurons
-from repro.kernels import ops as kops
-from repro.kernels.activity_fused import step_core
 from repro.scenarios import populations as pops
-from repro.scenarios import protocol as proto
-from repro.scenarios import regions as regions_mod
+from repro.sim import phases as sim_phases
 
 STAT_KEYS = ("spikes_sent", "rates_sent", "subscription_requests",
              "subscription_overflow", "bh_requests", "bh_responses",
@@ -50,7 +53,11 @@ class BrainState(NamedTuple):
     """Engine state. The rate-exchange fields are layout-dependent
     (cfg.rate_exchange): 'dense' holds the replicated all-gathered
     ``rates_table`` and the sparse fields are None; 'sparse' drops the
-    table and holds the rank-sharded subscription registry instead."""
+    table and holds the rank-sharded subscription registry instead.
+
+    Sharding: every field's PartitionSpec is declared explicitly in
+    ``state_specs`` below — adding a field here without declaring its spec
+    there is a hard error (no path-name inference)."""
     neurons: NeuronState
     out_edges: jnp.ndarray
     in_edges: jnp.ndarray
@@ -66,6 +73,36 @@ class BrainState(NamedTuple):
     stats: dict
 
 
+_RANKS = P("ranks")
+# NeuronState: every field is a (n,) per-neuron array, rank-sharded on its
+# only dim. Declared field-by-field so a new field must be placed here.
+_NEURON_SPECS = NeuronState(
+    v=_RANKS, u=_RANKS, calcium=_RANKS, ax_elements=_RANKS,
+    de_elements=_RANKS, spiked=_RANKS, spike_count=_RANKS, rate=_RANKS,
+    is_excitatory=_RANKS)
+
+
+def state_specs(state) -> BrainState:
+    """Explicit per-field PartitionSpecs for ``state`` (a BrainState of
+    arrays or ShapeDtypeStructs). The layout-dependent rate-exchange fields
+    keep None where the state holds None, so the spec tree always matches
+    the state tree."""
+    def opt(leaf, spec):
+        return None if leaf is None else spec
+    return BrainState(
+        neurons=_NEURON_SPECS,
+        out_edges=P("ranks", None),       # (n, S) synapse tables
+        in_edges=P("ranks", None),
+        positions=P("ranks", None),       # (n, 3)
+        rates_table=opt(state.rates_table, P()),   # replicated all-gather
+        subs=opt(state.subs, _RANKS),              # (subs_cap,) per rank
+        rate_slots=opt(state.rate_slots, P("ranks", None)),   # (n, S)
+        remote_rates=opt(state.remote_rates, _RANKS),
+        chunk=P(),                        # replicated scalar step counter
+        stats={k: _RANKS for k in state.stats},    # (1,) per-rank counters
+    )
+
+
 def _neuron_params(table: "pops.PopulationTable") -> NeuronParams:
     return NeuronParams(table.izh_a, table.izh_b, table.izh_c, table.izh_d,
                         table.growth_rate, table.target_calcium)
@@ -74,9 +111,6 @@ def _neuron_params(table: "pops.PopulationTable") -> NeuronParams:
 # ================================================================ init
 def init_state(cfg: BrainConfig, rank, num_ranks: int,
                scenario=None) -> BrainState:
-    if cfg.rate_exchange not in ("dense", "sparse"):
-        raise ValueError(f"unknown rate_exchange {cfg.rate_exchange!r}; "
-                         f"expected 'dense' or 'sparse'")
     n = cfg.neurons_per_rank
     key = jax.random.fold_in(jax.random.key(cfg.seed), rank)
     kp, kn = jax.random.split(key)
@@ -102,182 +136,47 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int,
                       jnp.zeros((), jnp.int32), stats)
 
 
-# ================================================================ activity
+# ================================================================ phases
+# Compat shims with the pre-facade six-arg signatures; the implementations
+# live in repro.sim.phases behind the phase registry.
 def activity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                    num_ranks: int, scenario=None):
-    """rate_period electrical steps. Spike exchange per cfg.spike_alg; the
-    lowering per cfg.activity_impl:
-
-      'reference'  jax.lax.scan over steps, each step the shared
-                   ``kernels.activity_fused.step_core`` jnp math (~6 fused
-                   passes per step, (n, s_max) temporaries in HBM);
-      'fused'      one Pallas megakernel per window (grid over steps,
-                   Delta-resident state — zero per-step HBM temporaries).
-                   Requires spike_alg='new': the old algorithm's per-step
-                   spiked-ID all-gather cannot live inside a kernel.
-
-    Both draw noise/remote spikes from the same counter-based hash keyed by
-    (seed, chunk*Delta + t, neuron/edge id), so the two lowerings are
-    bit-identical (tests/test_activity_fused.py). A scenario contributes
-    per-neuron parameters (population table), per-region background drive,
-    stimulation currents, and lesion masks — all trace-stable (the event
-    list is a static Python constant)."""
-    n = cfg.neurons_per_rank
-    table = pops.table_for(cfg, scenario, n)
-    izh = (table.izh_a, table.izh_b, table.izh_c, table.izh_d,
-           table.growth_rate, table.target_calcium)
-    ca_consts = (cfg.calcium_decay, cfg.calcium_beta)
-    regions = scenario.regions if scenario is not None else ()
-    events = scenario.events if scenario is not None else ()
-    bg_mean, bg_std = regions_mod.background_tables(state.positions, regions,
-                                                    cfg)
-    stim = proto.stim_tables(events, regions, state.positions) \
-        if events else None
-    lesions = proto.lesion_tables(events, regions, state.positions) \
-        if events else None
-    ns = state.neurons
-    st7 = (ns.v, ns.u, ns.calcium, ns.ax_elements, ns.de_elements,
-           ns.spiked, ns.spike_count)
-
-    if cfg.activity_impl not in ("reference", "fused"):
-        raise ValueError(f"unknown activity_impl {cfg.activity_impl!r}; "
-                         f"expected 'reference' or 'fused'")
-    # rate-exchange layout: dense reads the replicated (R, n) table with a
-    # 2-D (src rank, src lid) gather; sparse reads the compact per-rank
-    # subscribed-rate buffer through the (n, S) edge->slot remap
-    if cfg.rate_exchange == "sparse":
-        rates, rate_slots = state.remote_rates, state.rate_slots
-    else:
-        rates, rate_slots = state.rates_table, None
-    if cfg.activity_impl == "fused":
-        if cfg.spike_alg != "new":
-            raise ValueError(
-                "activity_impl='fused' requires spike_alg='new' — the old "
-                "algorithm exchanges spiked IDs every step (a collective), "
-                "which cannot run inside the megakernel")
-        out = kops.fused_activity_window(
-            st7, state.in_edges, table.synapse_weight, rates,
-            bg_mean, bg_std, state.chunk, rank, seed=cfg.seed,
-            num_steps=cfg.rate_period, izh=izh, ca_consts=ca_consts,
-            stim=stim, lesions=lesions, rate_slots=rate_slots)
-        neurons = ns._replace(v=out[0], u=out[1], calcium=out[2],
-                              ax_elements=out[3], de_elements=out[4],
-                              spiked=out[5], spike_count=out[6])
-        return state._replace(neurons=neurons)
-
-    def step(carry, t):
-        st, stats = carry
-        if cfg.spike_alg == "old":
-            all_ids, _ = spikes.exchange_spiked_ids(
-                st[5], rank, n, axis_name, num_ranks)
-            hits = spikes.lookup_spikes(all_ids, state.in_edges, n)
-            remote_in = hits & ((state.in_edges // n) != rank) \
-                & (state.in_edges >= 0)
-            stats = dict(stats, spikes_sent=stats["spikes_sent"]
-                         + jnp.sum(st[5]).astype(jnp.float32))
-        else:
-            remote_in = None   # step_core reconstructs from the hash
-        st = step_core(st, state.in_edges, table.synapse_weight,
-                       rates, bg_mean, bg_std, izh, ca_consts,
-                       cfg.seed, state.chunk * cfg.rate_period + t, rank, n,
-                       stim=stim, lesions=lesions, remote_override=remote_in,
-                       rate_slots=rate_slots)
-        return (st, stats), None
-
-    (out, stats), _ = jax.lax.scan(
-        step, (st7, state.stats),
-        jnp.arange(cfg.rate_period, dtype=jnp.int32))
-    neurons = ns._replace(v=out[0], u=out[1], calcium=out[2],
-                          ax_elements=out[3], de_elements=out[4],
-                          spiked=out[5], spike_count=out[6])
-    return state._replace(neurons=neurons, stats=stats)
+    ctx = sim_phases.make_context(cfg, rank, axis_name, num_ranks, scenario)
+    return sim_phases.activity_phase(state, ctx)
 
 
-# ================================================================ connectivity
 def connectivity_phase(state: BrainState, cfg: BrainConfig, rank, axis_name,
                        num_ranks: int, scenario=None):
-    """One structural-plasticity update — owned by the connectome subsystem
-    (repro.connectome: tree build, Barnes-Hut traversal, request routing,
-    synapse-table ops; DESIGN.md §6). ``cfg.connectivity_alg`` picks the
-    paper's algorithm pair (old = move data, new = move compute);
-    ``cfg.connectivity_impl`` picks the phase-B lowering (reference jnp vs
-    the Pallas traversal kernel — bit-identical)."""
-    return connectivity_update(state, cfg, rank, axis_name, num_ranks,
-                               scenario)
+    ctx = sim_phases.make_context(cfg, rank, axis_name, num_ranks, scenario)
+    return sim_phases.connectivity_phase(state, ctx)
+
+
+def sim_chunk(state: BrainState, cfg: BrainConfig, rank, axis_name,
+              num_ranks: int, scenario=None) -> BrainState:
+    ctx = sim_phases.make_context(cfg, rank, axis_name, num_ranks, scenario)
+    return sim_phases.sim_chunk(state, ctx)
 
 
 # ================================================================ driver
-def sim_chunk(state: BrainState, cfg: BrainConfig, rank, axis_name,
-              num_ranks: int, scenario=None) -> BrainState:
-    state = activity_phase(state, cfg, rank, axis_name, num_ranks, scenario)
-    state = connectivity_phase(state, cfg, rank, axis_name, num_ranks,
-                               scenario)
-    return state
-
-
 def make_brain_mesh(devices=None):
     devs = jax.devices() if devices is None else devices
     return Mesh(np.array(devs), ("ranks",))
 
 
-def _state_specs(state, num_ranks):
-    def spec(path, leaf):
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
-        if "rates_table" in name or "chunk" in name:
-            return P()  # replicated (all_gather result / scalar step counter)
-        # everything else — including the sparse-exchange subs/rate_slots/
-        # remote_rates registry — is rank-sharded on the leading dim
-        return P("ranks", *([None] * (leaf.ndim - 1)))
-    return jax.tree_util.tree_map_with_path(spec, state)
-
-
 def build_sim(cfg: BrainConfig, mesh: Mesh, scenario=None):
-    """Returns (init_fn, chunk_fn) jitted over the 'ranks' mesh.
-    ``scenario`` (repro.scenarios.protocol.Scenario) is a static experiment
-    description: heterogeneous populations, regions, and event protocols all
-    compile into the same single trace as the default simulation."""
-    num_ranks = mesh.shape["ranks"]
-
-    def sharded_init():
-        def body():
-            rank = jax.lax.axis_index("ranks")
-            st = init_state(cfg, rank, num_ranks, scenario)
-            return st
-        shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks,
-                                                   scenario))
-        out_specs = _state_specs(shapes, num_ranks)
-        return jax.jit(compat.shard_map(body, mesh=mesh, in_specs=(),
-                                        out_specs=out_specs,
-                                        check_vma=False))()
-
-    shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks, scenario))
-    specs = _state_specs(shapes, num_ranks)
-
-    def chunk_body(st):
-        rank = jax.lax.axis_index("ranks")
-        return sim_chunk(st, cfg, rank, "ranks", num_ranks, scenario)
-
-    chunk = jax.jit(compat.shard_map(chunk_body, mesh=mesh, in_specs=(specs,),
-                                     out_specs=specs, check_vma=False),
-                    donate_argnums=(0,))
-    return sharded_init, chunk
+    """DEPRECATED compat shim: returns (init_fn, chunk_fn) jitted over the
+    'ranks' mesh — the exact jitted callables ``repro.sim.api.Simulator``
+    drives, so the two entry points share one trace and stay bit-identical.
+    New code should construct a ``Simulator`` directly."""
+    from repro.sim.api import Simulator
+    sim = Simulator(cfg, scenario=scenario, mesh=mesh)
+    return sim.init_fn, sim.chunk_fn
 
 
-def lower_sim_step(cfg: BrainConfig, mesh):
-    """Dry-run entry: lower one sim chunk on all devices of ``mesh``."""
+def lower_sim_step(cfg: BrainConfig, mesh, scenario=None):
+    """Dry-run entry: lower one sim chunk on all devices of ``mesh``.
+    Routed through ``Simulator.lower()`` so a scenario lowers its own
+    trace (stimulus/lesion tables and population parameters included)."""
+    from repro.sim.api import Simulator
     bmesh = make_brain_mesh(list(mesh.devices.flat))
-    init_fn, chunk = build_sim(cfg, bmesh)
-    num_ranks = bmesh.shape["ranks"]
-    shapes = jax.eval_shape(lambda: init_state(cfg, 0, num_ranks))
-    # global view: leading rank-local dim concatenated across ranks
-    global_shapes = jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(
-            (l.shape[0] * num_ranks,) + l.shape[1:] if l.ndim >= 1 else
-            l.shape, l.dtype), shapes)
-    # the dense rates_table & the step counter are replicated (not
-    # concatenated); sparse-mode registry fields are rank-sharded like the
-    # rest (and rates_table is None then — _replace is a no-op on it)
-    global_shapes = global_shapes._replace(
-        rates_table=shapes.rates_table, chunk=shapes.chunk)
-    return chunk.lower(global_shapes)
+    return Simulator(cfg, scenario=scenario, mesh=bmesh).lower()

@@ -23,11 +23,11 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.msp_brain import SMOKE_CONFIG, BrainConfig
-from repro.core import engine
-from repro.scenarios import observables, protocol
+from repro.scenarios import observables
 from repro.scenarios.populations import population
 from repro.scenarios.protocol import Lesion, Scenario, Stimulate
 from repro.scenarios.regions import Region
+from repro.sim.api import Simulator
 
 # smoke-scale default: overflow-free buffers so every run is exactly the MSP
 # dynamics (tests/benchmarks compare old vs new bitwise)
@@ -82,22 +82,14 @@ def get_scenario(name: str) -> Scenario:
 
 def run_scenario(scenario: Scenario, cfg: BrainConfig = None,
                  num_chunks: int = None, mesh=None, recorder_cap: int = None):
-    """Run a scenario end-to-end. Returns (final_state, history) where
-    history is the flushed observables dict (oldest chunk first)."""
+    """Run a scenario end-to-end — a thin wrapper over the ``Simulator``
+    facade's fused multi-chunk driver (the recorder rows are written inside
+    the same jitted scan). Returns (final_state, history) where history is
+    the flushed observables dict (oldest chunk first)."""
     cfg = cfg or SMOKE_SCENARIO_CONFIG
     num_chunks = num_chunks or scenario.num_chunks
-    mesh = mesh or engine.make_brain_mesh()
-    init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scenario)
-    st = init_fn()
-    nb = len(scenario.regions) + 1
-    rec = observables.init_recorder(recorder_cap or num_chunks, nb)
-    for i in range(num_chunks):
-        st = chunk(st)
-        alive = protocol.alive_mask(scenario.events, scenario.regions,
-                                    st.positions,
-                                    (i + 1) * cfg.rate_period) \
-            if scenario.events else None
-        rec = observables.record(rec, st.positions, st.neurons.calcium,
-                                 st.neurons.rate, st.out_edges,
-                                 scenario.regions, alive)
+    sim = Simulator.from_config(cfg, scenario=scenario, mesh=mesh)
+    rec = observables.init_recorder(recorder_cap or num_chunks,
+                                    len(scenario.regions) + 1)
+    st, rec = sim.run(num_chunks, recorder=rec)
     return st, observables.flush(rec)

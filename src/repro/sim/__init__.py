@@ -1,0 +1,31 @@
+"""repro.sim — the experiment-facing simulation facade (DESIGN.md §8).
+
+  api.py       ``Simulator``: mesh + sharded init + fused multi-chunk
+               ``run``/``step`` driver, ``stats``, ``lower``,
+               ``save``/``restore``
+  phases.py    ``PhaseContext`` + the engine-level phase implementations
+  registry.py  the phase-implementation registry the five BrainConfig
+               variant fields resolve through
+
+Submodules are loaded lazily (PEP 562): ``repro.sim.registry`` is
+import-light and safe from ``BrainConfig.__post_init__``; importing
+``Simulator`` pulls in the full engine stack.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Simulator": ("repro.sim.api", "Simulator"),
+    "PhaseContext": ("repro.sim.phases", "PhaseContext"),
+    "make_context": ("repro.sim.phases", "make_context"),
+    "register_phase": ("repro.sim.registry", "register_phase"),
+}
+
+__all__ = sorted(_LAZY) + ["api", "phases", "registry"]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")

@@ -1,0 +1,200 @@
+"""The user-facing simulation facade.
+
+``Simulator`` owns everything the examples and benchmarks used to
+hand-roll: mesh construction, sharded init under shard_map, the jitted
+per-chunk step, a fused multi-chunk ``run`` (ONE jitted ``lax.scan`` over
+chunks with donated carry — no Python dispatch between chunks), summed
+stats, scenario-aware lowering for the dry-run/roofline path, and
+checkpointing built on ``repro.checkpoint.manager``.
+
+Bit-identity contract: ``engine.build_sim`` (the deprecated shim) returns
+this class's own jitted callables, so both entry points share one trace;
+and ``run(k)`` is bit-identical to ``k`` sequential ``step()`` calls
+because every source of randomness is keyed by counters carried in the
+state (``state.chunk``, the per-step counter hash), never by Python-side
+loop indices (DESIGN.md §2/§8; tests/test_sim_api.py,
+tests/test_multidevice.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro import compat
+from repro.checkpoint import manager
+from repro.core import engine
+from repro.scenarios import observables
+from repro.scenarios import protocol as proto
+from repro.sim import phases as sim_phases
+from repro.sim import registry
+
+
+class Simulator:
+    """Drive the MSP brain simulation.
+
+    >>> sim = Simulator.from_config(cfg, scenario=scn)   # mesh + init
+    >>> sim.run(20)                                      # one fused scan
+    >>> sim.stats()["synapses_formed"]
+    """
+
+    def __init__(self, cfg, scenario=None, mesh=None):
+        # cfg was validated eagerly in BrainConfig.__post_init__ (registry
+        # .check_config); here we only make sure every @register_phase
+        # decorator has run before the first resolve() inside a trace
+        registry.ensure_loaded()
+        self.cfg = cfg
+        self.scenario = scenario
+        self.mesh = mesh if mesh is not None else engine.make_brain_mesh()
+        self.num_ranks = self.mesh.shape["ranks"]
+        shapes = jax.eval_shape(
+            lambda: engine.init_state(cfg, 0, self.num_ranks, scenario))
+        self.specs = engine.state_specs(shapes)
+
+        def init_body():
+            rank = jax.lax.axis_index("ranks")
+            return engine.init_state(cfg, rank, self.num_ranks, scenario)
+
+        self.init_fn = jax.jit(compat.shard_map(
+            init_body, mesh=self.mesh, in_specs=(), out_specs=self.specs,
+            check_vma=False))
+
+        def chunk_body(st):
+            rank = jax.lax.axis_index("ranks")
+            ctx = sim_phases.make_context(cfg, rank, "ranks",
+                                          self.num_ranks, scenario)
+            return sim_phases.sim_chunk(st, ctx)
+
+        # the un-jitted shard_map'd chunk: `step` jits it directly, `run`
+        # scans it — both drive the SAME traced computation
+        self._chunk_shard = compat.shard_map(
+            chunk_body, mesh=self.mesh, in_specs=(self.specs,),
+            out_specs=self.specs, check_vma=False)
+        self.chunk_fn = jax.jit(self._chunk_shard, donate_argnums=(0,))
+        self._run_cache = {}
+        self._state = None
+
+    @classmethod
+    def from_config(cls, cfg, scenario=None, mesh=None) -> "Simulator":
+        return cls(cfg, scenario=scenario, mesh=mesh)
+
+    # ------------------------------------------------------------ state
+    @property
+    def state(self):
+        """The current BrainState (global sharded arrays); initializes on
+        first access."""
+        if self._state is None:
+            self._state = self.init_fn()
+        return self._state
+
+    def init(self):
+        """(Re)initialize from cfg.seed and return the fresh state."""
+        self._state = self.init_fn()
+        return self._state
+
+    # ------------------------------------------------------------ driving
+    def step(self):
+        """Advance one chunk (Delta activity steps + connectivity update)."""
+        self._state = self.chunk_fn(self.state)
+        return self._state
+
+    def run(self, num_chunks: int, recorder: Optional[object] = None):
+        """Advance ``num_chunks`` chunks as ONE jitted ``lax.scan`` with
+        donated carry — a single dispatch, no per-chunk Python overhead.
+
+        With ``recorder`` (an ``observables.Recorder``), one row of
+        per-region observables is recorded after every chunk (on the
+        global arrays, inside the same scan) and the advanced recorder is
+        returned: ``state, rec = sim.run(k, recorder=rec)``. Without it,
+        returns the final state."""
+        fn = self._run_fn(int(num_chunks), recorder is not None)
+        if recorder is None:
+            self._state = fn(self.state)
+            return self._state
+        self._state, recorder = fn(self.state, recorder)
+        return self._state, recorder
+
+    def _run_fn(self, k: int, with_recorder: bool):
+        key = (k, with_recorder)
+        if key in self._run_cache:
+            return self._run_cache[key]
+        chunk, cfg = self._chunk_shard, self.cfg
+        scn = self.scenario
+        regions = scn.regions if scn is not None else ()
+        events = scn.events if scn is not None else ()
+
+        if with_recorder:
+            def body(carry, _):
+                st, rec = carry
+                st = chunk(st)
+                # st.chunk already advanced: the global step at this
+                # chunk's end, correct even when resuming from a restore
+                alive = proto.alive_mask(events, regions, st.positions,
+                                         st.chunk * cfg.rate_period) \
+                    if events else None
+                rec = observables.record(rec, st.positions,
+                                         st.neurons.calcium,
+                                         st.neurons.rate, st.out_edges,
+                                         regions, alive)
+                return (st, rec), None
+
+            def runner(st, rec):
+                (st, rec), _ = jax.lax.scan(body, (st, rec), None, length=k)
+                return st, rec
+
+            # only the state is donated: donating the caller's recorder
+            # would silently invalidate their reference, and its buffers
+            # are a few (cap, nb) rows — nothing worth reusing
+            fn = jax.jit(runner, donate_argnums=(0,))
+        else:
+            def runner(st):
+                st, _ = jax.lax.scan(lambda s, _: (chunk(s), None), st,
+                                     None, length=k)
+                return st
+
+            fn = jax.jit(runner, donate_argnums=(0,))
+        self._run_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------ readout
+    def stats(self) -> dict:
+        """The paper's byte-accounting counters, summed over ranks, as
+        plain floats."""
+        return {k: float(v.sum()) for k, v in self.state.stats.items()}
+
+    def lower(self):
+        """Lower one sim chunk at the global sharded shapes — scenario
+        included, so the dry-run/roofline path sees the trace that will
+        actually run (stimulus tables, population params, lesion masks)."""
+        return self.chunk_fn.lower(jax.eval_shape(self.init_fn))
+
+    # ------------------------------------------------------------ persist
+    def save(self, path: str) -> int:
+        """Atomic full-state checkpoint at ``<path>/step_<chunk>/`` via
+        ``checkpoint.manager``. Returns the saved chunk number."""
+        st = self.state
+        step = int(jax.device_get(st.chunk))
+        manager.save(path, step, st,
+                     metadata={"cfg": self.cfg.name,
+                               "rate_exchange": self.cfg.rate_exchange,
+                               "num_ranks": self.num_ranks})
+        return step
+
+    def restore(self, path: str, step: Optional[int] = None) -> int:
+        """Load a checkpoint (latest step by default) and reshard it onto
+        THIS simulator's mesh. ``run``/``step`` continue bit-identically
+        to an uninterrupted run: all randomness is keyed by the restored
+        ``chunk`` counter and the per-step hash, and the stats
+        accumulators travel with the state."""
+        if step is None:
+            step = manager.latest_step(path)
+            if step is None:
+                raise FileNotFoundError(f"no checkpoint under {path!r}")
+        target = jax.eval_shape(self.init_fn)
+        shardings = jax.tree.map(
+            lambda spec: NamedSharding(self.mesh, spec), self.specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+        tree, _ = manager.restore(path, step, target, shardings)
+        self._state = tree
+        return step

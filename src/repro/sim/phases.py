@@ -1,0 +1,188 @@
+"""PhaseContext + the engine-level phase implementations.
+
+``PhaseContext`` replaces the ``(state, cfg, rank, axis_name, num_ranks,
+scenario)`` six-argument threading that every phase used to take: build it
+once per trace (inside the shard_map body, where ``rank`` is the traced
+axis index) and every phase, registered variant, and helper reads the same
+bundle. The derived tables (population parameters, region/event tuples) are
+computed here so the phases do not re-derive them.
+
+The activity-phase variants (``activity_impl``) and the per-step spike
+exchange variants (``spike_alg``) are registered here; the connectivity
+formation pair, the phase-B traversal lowerings, and the rate-exchange
+layouts register themselves next to their implementations in
+``repro.connectome``. ``repro.core.engine`` keeps thin compat shims with
+the old six-arg signatures — this module must NOT import it (engine imports
+us).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.connectome.update import connectivity_update
+from repro.core import spikes
+from repro.kernels import ops as kops
+from repro.kernels.activity_fused import step_core
+from repro.scenarios import populations as pops
+from repro.scenarios import protocol as proto
+from repro.scenarios import regions as regions_mod
+from repro.sim import registry
+
+
+@dataclass
+class PhaseContext:
+    """Everything a phase implementation needs besides the BrainState.
+
+    ``rank`` is the traced ``lax.axis_index`` inside shard_map (or a
+    concrete int in single-rank helpers); ``table`` is the per-neuron
+    population parameter table; ``regions``/``events`` are the scenario's
+    static tuples (empty when scenario is None)."""
+    cfg: Any
+    rank: Any
+    axis_name: Optional[str]
+    num_ranks: int
+    scenario: Any = None
+    table: Any = None
+    regions: Tuple = ()
+    events: Tuple = ()
+
+
+def make_context(cfg, rank, axis_name, num_ranks: int,
+                 scenario=None) -> PhaseContext:
+    table = pops.table_for(cfg, scenario, cfg.neurons_per_rank)
+    regions = scenario.regions if scenario is not None else ()
+    events = scenario.events if scenario is not None else ()
+    return PhaseContext(cfg=cfg, rank=rank, axis_name=axis_name,
+                        num_ranks=num_ranks, scenario=scenario, table=table,
+                        regions=regions, events=events)
+
+
+# ================================================================ activity
+def _window_inputs(state, ctx: PhaseContext):
+    """Shared per-window tables: Izhikevich params, background drive,
+    protocol tables, and the layout-dependent rate view (dense reads the
+    replicated (R, n) table; sparse the compact subscribed-rate buffer
+    through the (n, S) edge->slot remap)."""
+    cfg, table = ctx.cfg, ctx.table
+    izh = (table.izh_a, table.izh_b, table.izh_c, table.izh_d,
+           table.growth_rate, table.target_calcium)
+    ca_consts = (cfg.calcium_decay, cfg.calcium_beta)
+    bg_mean, bg_std = regions_mod.background_tables(state.positions,
+                                                    ctx.regions, cfg)
+    stim = proto.stim_tables(ctx.events, ctx.regions, state.positions) \
+        if ctx.events else None
+    lesions = proto.lesion_tables(ctx.events, ctx.regions, state.positions) \
+        if ctx.events else None
+    if cfg.rate_exchange == "sparse":
+        rates, rate_slots = state.remote_rates, state.rate_slots
+    else:
+        rates, rate_slots = state.rates_table, None
+    return izh, ca_consts, bg_mean, bg_std, stim, lesions, rates, rate_slots
+
+
+def _st7(neurons):
+    return (neurons.v, neurons.u, neurons.calcium, neurons.ax_elements,
+            neurons.de_elements, neurons.spiked, neurons.spike_count)
+
+
+def _unpack_st7(neurons, out):
+    return neurons._replace(v=out[0], u=out[1], calcium=out[2],
+                            ax_elements=out[3], de_elements=out[4],
+                            spiked=out[5], spike_count=out[6])
+
+
+@registry.register_phase("spikes", "old")
+def spikes_old(st7, state, ctx: PhaseContext, stats):
+    """OLD spike transmission, one step: all-gather sorted spiked-ID
+    buffers, binary-search each remote in-edge."""
+    n = ctx.cfg.neurons_per_rank
+    all_ids, _ = spikes.exchange_spiked_ids(st7[5], ctx.rank, n,
+                                            ctx.axis_name, ctx.num_ranks)
+    hits = spikes.lookup_spikes(all_ids, state.in_edges, n)
+    remote_in = hits & ((state.in_edges // n) != ctx.rank) \
+        & (state.in_edges >= 0)
+    stats = dict(stats, spikes_sent=stats["spikes_sent"]
+                 + jnp.sum(st7[5]).astype(jnp.float32))
+    return remote_in, stats
+
+
+@registry.register_phase("spikes", "new")
+def spikes_new(st7, state, ctx: PhaseContext, stats):
+    """NEW spike transmission: no per-step exchange at all — step_core
+    reconstructs remote spikes from the counter hash + exchanged rates."""
+    return None, stats
+
+
+@registry.register_phase("activity", "reference")
+def activity_reference(state, ctx: PhaseContext):
+    """jax.lax.scan over the window's steps, each step the shared
+    ``kernels.activity_fused.step_core`` jnp math (~6 fused passes per
+    step, (n, s_max) temporaries in HBM)."""
+    cfg = ctx.cfg
+    n = cfg.neurons_per_rank
+    izh, ca_consts, bg_mean, bg_std, stim, lesions, rates, rate_slots = \
+        _window_inputs(state, ctx)
+    spike_exchange = registry.resolve("spikes", cfg.spike_alg)
+
+    def step(carry, t):
+        st, stats = carry
+        remote_in, stats = spike_exchange(st, state, ctx, stats)
+        st = step_core(st, state.in_edges, ctx.table.synapse_weight,
+                       rates, bg_mean, bg_std, izh, ca_consts,
+                       cfg.seed, state.chunk * cfg.rate_period + t, ctx.rank,
+                       n, stim=stim, lesions=lesions,
+                       remote_override=remote_in, rate_slots=rate_slots)
+        return (st, stats), None
+
+    (out, stats), _ = jax.lax.scan(
+        step, (_st7(state.neurons), state.stats),
+        jnp.arange(cfg.rate_period, dtype=jnp.int32))
+    return state._replace(neurons=_unpack_st7(state.neurons, out),
+                          stats=stats)
+
+
+@registry.register_phase("activity", "fused")
+def activity_fused(state, ctx: PhaseContext):
+    """One Pallas megakernel per rate window (grid over steps,
+    Delta-resident VMEM state — zero per-step HBM temporaries). Requires
+    spike_alg='new' (enforced at config construction): the old algorithm's
+    per-step spiked-ID all-gather cannot live inside a kernel."""
+    cfg = ctx.cfg
+    izh, ca_consts, bg_mean, bg_std, stim, lesions, rates, rate_slots = \
+        _window_inputs(state, ctx)
+    out = kops.fused_activity_window(
+        _st7(state.neurons), state.in_edges, ctx.table.synapse_weight, rates,
+        bg_mean, bg_std, state.chunk, ctx.rank, seed=cfg.seed,
+        num_steps=cfg.rate_period, izh=izh, ca_consts=ca_consts,
+        stim=stim, lesions=lesions, rate_slots=rate_slots)
+    return state._replace(neurons=_unpack_st7(state.neurons, out))
+
+
+# ================================================================ dispatch
+def activity_phase(state, ctx: PhaseContext):
+    """rate_period electrical steps; lowering per ``cfg.activity_impl``,
+    per-step spike exchange per ``cfg.spike_alg``. Both lowerings draw
+    noise/remote spikes from the same counter-based hash keyed by (seed,
+    chunk*Delta + t, neuron/edge id), so they are bit-identical
+    (tests/test_activity_fused.py)."""
+    return registry.resolve("activity", ctx.cfg.activity_impl)(state, ctx)
+
+
+def connectivity_phase(state, ctx: PhaseContext):
+    """One structural-plasticity update — owned by the connectome subsystem
+    (repro.connectome; DESIGN.md §6). ``cfg.connectivity_alg`` picks the
+    paper's algorithm pair, ``cfg.connectivity_impl`` the phase-B lowering,
+    ``cfg.rate_exchange`` the Delta-periodic exchange layout — all resolved
+    through the phase registry."""
+    return connectivity_update(state, ctx)
+
+
+def sim_chunk(state, ctx: PhaseContext):
+    """One chunk = one rate window (Delta activity steps) + one
+    connectivity update."""
+    state = activity_phase(state, ctx)
+    return connectivity_phase(state, ctx)

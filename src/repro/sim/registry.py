@@ -1,0 +1,112 @@
+"""Phase-implementation registry: the five variant fields of ``BrainConfig``
+resolve to callables here, at build time, instead of being string-compared
+mid-trace in three different modules.
+
+Each *domain* is one variant axis of the paper's three-phase loop; each
+*name* is one registered implementation:
+
+  domain          config field         registered implementations
+  --------------  -------------------  ------------------------------------
+  activity        activity_impl        reference (jnp scan) | fused (Pallas
+                                       megakernel)           [sim/phases.py]
+  spikes          spike_alg            old (per-step IDs) | new (rates +
+                                       counter PRNG)         [sim/phases.py]
+  connectivity    connectivity_alg     old (move data) | new (move compute)
+                                                        [connectome/update.py]
+  traversal       connectivity_impl    reference (jnp phase-B) | fused
+                                       (Pallas traversal) [connectome/traverse]
+  rate_exchange   rate_exchange        dense ((R, n) all-gather) | sparse
+                                       (subscription push) [connectome/update]
+
+``_DOMAINS`` is the single source of truth for the *allowed names*: it is
+plain data, so ``BrainConfig.__post_init__`` can validate eagerly (at
+construction, with the allowed set in the error) without importing any of
+the jax-heavy implementation modules. ``register_phase`` refuses a name not
+declared here — adding an implementation means adding its name to the table
+AND decorating the callable, one line each, in the same PR.
+
+This module is import-light on purpose (stdlib only): configs, kernels, and
+the connectome all import it without cycles. ``resolve`` lazily imports
+``repro.sim.phases`` the first time so every ``@register_phase`` decorator
+has run before any lookup.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+_DOMAINS: Dict[str, Tuple[str, ...]] = {
+    "activity": ("reference", "fused"),
+    "spikes": ("old", "new"),
+    "connectivity": ("old", "new"),
+    "traversal": ("reference", "fused"),
+    "rate_exchange": ("dense", "sparse"),
+}
+
+# domain -> the BrainConfig field it is selected by (also used in errors, so
+# a bad value names the field the user actually typed)
+CONFIG_FIELDS: Dict[str, str] = {
+    "activity": "activity_impl",
+    "spikes": "spike_alg",
+    "connectivity": "connectivity_alg",
+    "traversal": "connectivity_impl",
+    "rate_exchange": "rate_exchange",
+}
+
+_IMPLS: Dict[Tuple[str, str], Callable] = {}
+
+
+def register_phase(domain: str, name: str):
+    """Decorator: register ``fn`` as the ``name`` implementation of
+    ``domain``. The (domain, name) pair must be declared in ``_DOMAINS``."""
+    if domain not in _DOMAINS:
+        raise ValueError(f"unknown phase domain {domain!r}; "
+                         f"declared: {sorted(_DOMAINS)}")
+    if name not in _DOMAINS[domain]:
+        raise ValueError(f"implementation name {name!r} not declared for "
+                         f"domain {domain!r}; declared: {_DOMAINS[domain]} "
+                         f"(add it to registry._DOMAINS first)")
+
+    def deco(fn):
+        _IMPLS[(domain, name)] = fn
+        return fn
+    return deco
+
+
+def allowed(domain: str) -> Tuple[str, ...]:
+    return _DOMAINS[domain]
+
+
+def _bad_value(domain: str, name) -> ValueError:
+    field = CONFIG_FIELDS[domain]
+    opts = ", ".join(repr(v) for v in _DOMAINS[domain])
+    return ValueError(f"unknown {field} {name!r}; allowed: {opts}")
+
+
+def check_config(cfg) -> None:
+    """Eager validation of all five variant fields plus cross-field
+    compatibility. Called from ``BrainConfig.__post_init__`` so an illegal
+    config can never reach a trace. Pure data lookup — no heavy imports."""
+    for domain, field in CONFIG_FIELDS.items():
+        value = getattr(cfg, field)
+        if value not in _DOMAINS[domain]:
+            raise _bad_value(domain, value)
+    if cfg.activity_impl == "fused" and cfg.spike_alg != "new":
+        raise ValueError(
+            "activity_impl='fused' requires spike_alg='new' — the old "
+            "algorithm exchanges spiked IDs every step (a collective), "
+            "which cannot run inside the megakernel")
+
+
+def ensure_loaded() -> None:
+    """Import the modules that carry ``@register_phase`` decorators."""
+    import repro.sim.phases  # noqa: F401  (pulls in connectome.* transitively)
+
+
+def resolve(domain: str, name: str) -> Callable:
+    """Name -> callable, loading implementations on first use. Raises
+    ``ValueError`` naming the config field and the allowed set."""
+    ensure_loaded()
+    try:
+        return _IMPLS[(domain, name)]
+    except KeyError:
+        raise _bad_value(domain, name) from None

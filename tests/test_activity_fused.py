@@ -183,11 +183,10 @@ def test_engine_fused_equals_reference():
 
 
 def test_fused_requires_new_spike_alg():
-    cfg = dataclasses.replace(SMALL, activity_impl="fused", spike_alg="old")
-    mesh = engine.make_brain_mesh()
+    # illegal combinations now fail eagerly, at config construction
+    # (BrainConfig.__post_init__ -> sim.registry), never mid-trace
     with pytest.raises(ValueError, match="spike_alg"):
-        init_fn, chunk = engine.build_sim(cfg, mesh)
-        chunk(init_fn())
+        dataclasses.replace(SMALL, activity_impl="fused", spike_alg="old")
 
 
 @pytest.mark.parametrize("name", sorted(library.SCENARIOS))
@@ -225,7 +224,7 @@ def test_fused_hbm_bytes_drop_3x():
     mesh = engine.make_brain_mesh()
     num_ranks = mesh.shape["ranks"]
     shapes = jax.eval_shape(lambda: engine.init_state(cfg, 0, num_ranks))
-    specs = engine._state_specs(shapes, num_ranks)
+    specs = engine.state_specs(shapes)
 
     def body(st):
         rank = jax.lax.axis_index("ranks")

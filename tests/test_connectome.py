@@ -170,14 +170,12 @@ def test_bh_traverse_prng_is_location_independent():
 
 
 def test_connectivity_impl_validation():
-    cfg = dataclasses.replace(BrainConfig(neurons_per_rank=16,
-                                          local_levels=2, frontier_cap=32,
-                                          max_synapses=4),
-                              connectivity_impl="bogus")
-    mesh = engine.make_brain_mesh()
+    # unknown variant names fail eagerly at config construction
     with pytest.raises(ValueError, match="connectivity_impl"):
-        init_fn, chunk = engine.build_sim(cfg, mesh)
-        chunk(init_fn())
+        dataclasses.replace(BrainConfig(neurons_per_rank=16,
+                                        local_levels=2, frontier_cap=32,
+                                        max_synapses=4),
+                            connectivity_impl="bogus")
 
 
 # ---------------------------------------------------------------- engine

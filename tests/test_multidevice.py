@@ -216,6 +216,57 @@ def test_sparse_rate_exchange_scenarios_identical():
     assert "SCENARIOS SPARSE==DENSE" in out
 
 
+_RUN_SCAN_CODE = """
+    import dataclasses
+    import jax, numpy as np
+    from repro.configs.msp_brain import BrainConfig
+    from repro.core import engine
+    from repro.scenarios import Lesion, Recover, Stimulate, library
+    from repro.sim import Simulator
+    base = BrainConfig(neurons_per_rank=32, local_levels=3,
+                       frontier_cap=32, max_synapses=8, rate_period=10,
+                       requests_cap_factor=1000, subs_cap_factor=1000,
+                       rate_exchange={rex!r})
+    def scaled(scn, div=50):
+        evs = []
+        for e in scn.events:
+            if isinstance(e, Stimulate):
+                evs.append(dataclasses.replace(
+                    e, t0=e.t0 // div, t1=max(e.t1 // div, e.t0 // div + 5)))
+            elif isinstance(e, (Lesion, Recover)):
+                evs.append(dataclasses.replace(e, t=e.t // div))
+        return dataclasses.replace(scn, events=tuple(evs))
+    for name in sorted(library.SCENARIOS):
+        scn = scaled(library.get_scenario(name))
+        for impl in ['reference', 'fused']:
+            cfg = dataclasses.replace(base, activity_impl=impl)
+            st_scan = Simulator.from_config(cfg, scenario=scn).run(2)
+            init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh(),
+                                              scenario=scn)
+            st = init_fn()
+            for _ in range(2):
+                st = chunk(st)
+            for a, b in zip(jax.tree.leaves(st_scan), jax.tree.leaves(st)):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \\
+                    (name, impl)
+    print('RUN==SEQ')
+"""
+
+
+def test_simulator_run_scan_bit_identical_dense():
+    """The facade's fused multi-chunk scan (Simulator.run(k)) == k
+    sequential build_sim chunk dispatches, bit for bit, on a 4-rank mesh —
+    every library scenario x both activity lowerings, dense exchange."""
+    out = run_py(_RUN_SCAN_CODE.format(rex="dense"), devices=4)
+    assert "RUN==SEQ" in out
+
+
+def test_simulator_run_scan_bit_identical_sparse():
+    """Same contract under the sparse subscription-based exchange."""
+    out = run_py(_RUN_SCAN_CODE.format(rex="sparse"), devices=4)
+    assert "RUN==SEQ" in out
+
+
 def test_fused_connectivity_identical_across_ranks():
     """The Pallas traversal kernel == the reference phase-B bit-for-bit on a
     real multi-rank mesh (42B request routing, nonzero gid_base, gathered

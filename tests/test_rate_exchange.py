@@ -141,9 +141,9 @@ def test_engine_sparse_equals_dense_single_rank():
 
 
 def test_unknown_rate_exchange_raises():
-    cfg = BrainConfig(rate_exchange="banana")
+    # unknown variant names fail eagerly at config construction
     with pytest.raises(ValueError, match="rate_exchange"):
-        engine.init_state(cfg, 0, 1)
+        BrainConfig(rate_exchange="banana")
 
 
 def test_window_hbm_bytes_sparse_model():

@@ -1,0 +1,168 @@
+"""The repro.sim facade: eager config validation through the phase
+registry, Simulator driving (fused multi-chunk scan == sequential chunk
+dispatch, bitwise), scenario-aware lowering, explicit state sharding
+specs, and checkpoint round-trips."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.msp_brain import BrainConfig
+from repro.core import engine
+from repro.scenarios import library, observables
+from repro.sim import Simulator, registry
+
+SMALL = BrainConfig(neurons_per_rank=32, local_levels=3, frontier_cap=32,
+                    max_synapses=8, rate_period=10, requests_cap_factor=100,
+                    subs_cap_factor=100)
+
+
+def _assert_states_equal(a, b, msg=""):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------- registry
+@pytest.mark.parametrize("field,allowed_one", [
+    ("activity_impl", "reference"),
+    ("connectivity_impl", "reference"),
+    ("connectivity_alg", "new"),
+    ("spike_alg", "new"),
+    ("rate_exchange", "dense"),
+])
+def test_bad_variant_name_raises_at_construction(field, allowed_one):
+    """Every variant field validates eagerly, naming the field and the
+    allowed set — never mid-trace."""
+    with pytest.raises(ValueError) as ei:
+        BrainConfig(**{field: "definitely-bogus"})
+    assert field in str(ei.value)
+    assert allowed_one in str(ei.value)
+
+
+def test_illegal_combination_raises_at_construction():
+    with pytest.raises(ValueError, match="spike_alg"):
+        BrainConfig(activity_impl="fused", spike_alg="old")
+    # replace() re-runs __post_init__, so mutation can't sneak one in
+    with pytest.raises(ValueError, match="spike_alg"):
+        dataclasses.replace(SMALL, activity_impl="fused", spike_alg="old")
+
+
+def test_registry_resolve_unknown_name_lists_allowed():
+    with pytest.raises(ValueError, match="'reference', 'fused'"):
+        registry.resolve("activity", "bogus")
+
+
+def test_registry_all_declared_names_registered():
+    """Every declared (domain, name) pair has a registered callable."""
+    registry.ensure_loaded()
+    for domain in registry.CONFIG_FIELDS:
+        for name in registry.allowed(domain):
+            assert callable(registry.resolve(domain, name)), (domain, name)
+
+
+def test_register_phase_refuses_undeclared_name():
+    with pytest.raises(ValueError, match="not declared"):
+        registry.register_phase("activity", "undeclared-impl")
+
+
+# ---------------------------------------------------------------- sharding
+def test_state_specs_explicit_per_field():
+    for rex in ("dense", "sparse"):
+        cfg = dataclasses.replace(SMALL, rate_exchange=rex)
+        shapes = jax.eval_shape(lambda c=cfg: engine.init_state(c, 0, 1))
+        specs = engine.state_specs(shapes)
+        assert specs.out_edges == P("ranks", None)
+        assert specs.neurons.v == P("ranks")
+        assert specs.chunk == P()
+        if rex == "dense":
+            assert specs.rates_table == P()     # replicated gather result
+            assert specs.subs is None
+        else:
+            assert specs.rates_table is None
+            assert specs.subs == P("ranks")
+            assert specs.rate_slots == P("ranks", None)
+        # the spec tree must exactly match the state tree
+        jax.tree.map(lambda s, l: None, specs, shapes)
+
+
+# ---------------------------------------------------------------- driving
+def test_run_scan_equals_sequential_chunks():
+    """run(k) — ONE jitted lax.scan — is bit-identical to k sequential
+    build_sim chunk dispatches."""
+    st_scan = Simulator.from_config(SMALL).run(3)
+    init_fn, chunk = engine.build_sim(SMALL, engine.make_brain_mesh())
+    st = init_fn()
+    for _ in range(3):
+        st = chunk(st)
+    _assert_states_equal(st_scan, st, "scan != sequential")
+
+
+def test_step_then_run_continues_the_same_stream():
+    """Mixing step() and run() follows the same chunk-keyed stream."""
+    a = Simulator.from_config(SMALL)
+    a.step()
+    a.run(2)
+    b_state = Simulator.from_config(SMALL).run(3)
+    _assert_states_equal(a.state, b_state)
+
+
+def test_stats_are_summed_plain_floats():
+    sim = Simulator.from_config(SMALL)
+    sim.run(2)
+    s = sim.stats()
+    assert set(s) == set(engine.STAT_KEYS)
+    assert all(isinstance(v, float) for v in s.values())
+    assert s["synapses_formed"] > 0
+
+
+def test_run_with_recorder_matches_library_history():
+    scn = library.get_scenario("baseline_growth")
+    sim = Simulator.from_config(SMALL, scenario=scn)
+    rec = observables.init_recorder(3, 1)
+    _, rec = sim.run(3, recorder=rec)
+    hist = observables.flush(rec)
+    _, hist2 = library.run_scenario(scn, SMALL, num_chunks=3)
+    for k in ("calcium", "rate", "synapses"):
+        np.testing.assert_array_equal(hist[k], hist2[k], err_msg=k)
+
+
+# ---------------------------------------------------------------- lowering
+def test_lower_is_scenario_aware():
+    """The dry-run path lowers the trace that will actually run: a
+    stimulation protocol must change the lowered module (the old
+    ``lower_sim_step`` dropped its scenario)."""
+    scn = library.get_scenario("focal_stimulation")
+    plain = Simulator.from_config(SMALL).lower().as_text()
+    with_scn = Simulator.from_config(SMALL, scenario=scn).lower().as_text()
+    assert plain != with_scn
+    routed = engine.lower_sim_step(SMALL, engine.make_brain_mesh(),
+                                   scenario=scn).as_text()
+    assert routed == with_scn
+
+
+# ---------------------------------------------------------------- persist
+@pytest.mark.parametrize("rex", ["dense", "sparse"])
+def test_checkpoint_roundtrip_bit_identical(tmp_path, rex):
+    """save -> restore -> run(k) == uninterrupted run(n+k), bitwise, in
+    both rate-exchange layouts (all randomness is keyed by counters
+    carried in the state)."""
+    cfg = dataclasses.replace(SMALL, rate_exchange=rex)
+    a = Simulator.from_config(cfg)
+    a.run(2)
+    saved = a.save(str(tmp_path))
+    assert saved == 2
+    a.run(2)                                # uninterrupted: 4 chunks total
+    b = Simulator.from_config(cfg)
+    assert b.restore(str(tmp_path)) == 2
+    b.run(2)                                # resumed: 2 + 2 chunks
+    _assert_states_equal(a.state, b.state, f"round-trip diverged ({rex})")
+
+
+def test_restore_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Simulator.from_config(SMALL).restore(str(tmp_path / "nope"))
