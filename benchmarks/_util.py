@@ -1,5 +1,6 @@
-"""Shared benchmark helpers: timing, subprocess fan-out over device counts,
-CSV emission (format: name,us_per_call,derived)."""
+"""Shared benchmark helpers: timing with an explicit compile/steady split,
+subprocess fan-out over device counts, CSV emission (format:
+name,us_per_call,derived)."""
 from __future__ import annotations
 
 import json
@@ -7,13 +8,32 @@ import os
 import subprocess
 import sys
 import time
+from typing import Any, NamedTuple
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def time_fn(fn, *args, warmup=1, iters=3):
+class Timing(NamedTuple):
+    """One measurement: first-call latency (trace + compile + first run,
+    ms) and fenced steady-state per-iteration time (us). The two are
+    reported separately in every ``BENCH_*.json`` (telemetry.report
+    schema) — a compile-time regression must never hide in the
+    steady-state number or vice versa."""
+    compile_ms: float
+    steady_us: float
+
+
+def measure(fn, *args, warmup=1, iters=3):
+    """Time ``fn(*args)`` with the compile/steady split: the first call
+    (traced + compiled + executed, fenced) is ``compile_ms``; after
+    ``warmup`` more fenced calls, ``iters`` fenced calls average into
+    ``steady_us``. Returns (Timing, last_output)."""
     import jax
+    t0 = time.perf_counter()
+    out = fn(*args)
+    jax.block_until_ready(out)
+    compile_ms = (time.perf_counter() - t0) * 1e3
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -21,7 +41,15 @@ def time_fn(fn, *args, warmup=1, iters=3):
     for _ in range(iters):
         out = fn(*args)
         jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters, out
+    steady_us = (time.perf_counter() - t0) / iters * 1e6
+    return Timing(compile_ms, steady_us), out
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Back-compat shim over ``measure``: (steady seconds/iter, output).
+    The first warmup call doubles as the compile fence."""
+    timing, out = measure(fn, *args, warmup=max(warmup - 1, 0), iters=iters)
+    return timing.steady_us / 1e6, out
 
 
 def emit(name: str, us_per_call: float, derived=""):
@@ -50,22 +78,35 @@ PAPER_BYTES = {
 }
 
 
-def brain_sim(cfg_overrides, chunks=2, stats_only=False):
+def brain_sim_timed(cfg_overrides, chunks=2):
     """Build + run the brain sim on whatever devices exist, through the
-    ``repro.sim.Simulator`` facade; returns (time_per_chunk_s, final_state)."""
+    ``repro.sim.Simulator`` facade, with the compile/steady split: the
+    warmup chunk (compile + first plasticity round, fenced) is
+    ``compile_ms``; ``chunks`` more fenced chunks average into
+    ``steady_us``. Returns (Timing, simulator) — callers read the final
+    state from ``sim.state`` and full telemetry from ``sim.metrics()``."""
     import jax
     from repro.configs.msp_brain import BrainConfig
     from repro.sim import Simulator
     cfg = BrainConfig(**cfg_overrides)
     sim = Simulator.from_config(cfg)
+    t0 = time.perf_counter()
     st = sim.step()  # warmup/compile + first plasticity round
     jax.block_until_ready(st.positions)
+    compile_ms = (time.perf_counter() - t0) * 1e3
     t0 = time.perf_counter()
     for _ in range(chunks):
         st = sim.step()
     jax.block_until_ready(st.positions)
-    dt = (time.perf_counter() - t0) / chunks
-    return dt, st
+    steady_us = (time.perf_counter() - t0) / chunks * 1e6
+    return Timing(compile_ms, steady_us), sim
+
+
+def brain_sim(cfg_overrides, chunks=2, stats_only=False):
+    """Back-compat shim over ``brain_sim_timed``:
+    (steady time_per_chunk_s, final_state)."""
+    timing, sim = brain_sim_timed(cfg_overrides, chunks=chunks)
+    return timing.steady_us / 1e6, sim.state
 
 
 def paper_bytes_from_stats(stats, alg_conn: str, alg_spike: str,

@@ -13,21 +13,24 @@ sparse exchange additionally ships one 4B subscription-request id per
 pushed rate (``stats['subscription_requests']``) — reported separately and
 folded into ``total_bytes_ratio`` so the sparse win is not overstated.
 
-``--json`` writes ``BENCH_spikes.json`` at the repo root (the recorded
-perf-trajectory baseline: r=4, n=1024); ``--smoke`` runs a small n for CI
-and writes ``BENCH_spikes_smoke.json`` instead, so reproducing the CI step
-locally cannot clobber the committed baseline.
+Writes a ``repro.telemetry/v1`` report — device counters/histograms of the
+sparse run and host-side spans included — with ``--json`` to
+``BENCH_spikes.json`` at the repo root (the recorded perf-trajectory
+baseline: r=4, n=1024); ``--smoke`` runs a small n for CI and writes
+``BENCH_spikes_smoke.json`` instead, so reproducing the CI step locally
+cannot clobber the committed baseline. Compile (warmup chunk) and
+steady-state per-chunk time are reported separately.
 """
-import json
 import os
 import sys
 
-from benchmarks._util import PAPER_BYTES, ROOT, brain_sim, emit
+from benchmarks._util import PAPER_BYTES, ROOT, brain_sim_timed, emit
 
 
 def bench(n, chunks=2):
     import jax
     import numpy as np
+    from repro import telemetry
     from repro.core.spikes import NO_SUB
     r = len(jax.devices())
     base = dict(neurons_per_rank=n, local_levels=3, frontier_cap=32,
@@ -36,38 +39,40 @@ def bench(n, chunks=2):
     runs = {"old": dict(base, spike_alg="old"),
             "dense": dict(base, rate_exchange="dense"),
             "sparse": dict(base, rate_exchange="sparse")}
-    times, states = {}, {}
+    sims, metrics = {}, {}
     for name, cfg in runs.items():
-        times[name], states[name] = brain_sim(cfg, chunks=chunks)
+        with telemetry.span(f"bench.spikes.{name}", n=n):
+            timing, sims[name] = brain_sim_timed(cfg, chunks=chunks)
+        metrics[f"{name}_compile_ms"] = timing.compile_ms
+        metrics[f"{name}_steady_us_per_chunk"] = timing.steady_us
 
-    chunks_total = chunks + 1   # brain_sim's warmup chunk also accumulates
-    rep = {"num_ranks": r, "n_per_rank": n, "delta": base["rate_period"],
-           "old_us_per_chunk": times["old"] * 1e6,
-           "dense_us_per_chunk": times["dense"] * 1e6,
-           "sparse_us_per_chunk": times["sparse"] * 1e6}
+    chunks_total = chunks + 1   # the warmup chunk also accumulates
+    states = {name: sim.state for name, sim in sims.items()}
     for name in ("dense", "sparse"):
         sent = float(states[name].stats["rates_sent"].sum())
-        rep[f"{name}_rate_records_per_delta"] = sent / chunks_total
-        rep[f"{name}_rate_bytes_per_delta"] = \
+        metrics[f"{name}_rate_records_per_delta"] = sent / chunks_total
+        metrics[f"{name}_rate_bytes_per_delta"] = \
             sent / chunks_total * PAPER_BYTES["rate"]
     subs = np.asarray(states["sparse"].subs)
-    rep["subs_per_rank_mean"] = float((subs != NO_SUB).sum()) / r
-    rep["dense_table_bytes_per_rank"] = r * n * PAPER_BYTES["rate"]
-    rep["subscription_overflow"] = \
+    metrics["subs_per_rank_mean"] = float((subs != NO_SUB).sum()) / r
+    metrics["dense_table_bytes_per_rank"] = r * n * PAPER_BYTES["rate"]
+    metrics["subscription_overflow"] = \
         float(states["sparse"].stats["subscription_overflow"].sum())
     # the 4B request ids shipped alongside the pushed rates (dense: none)
     reqs = float(states["sparse"].stats["subscription_requests"].sum())
-    rep["sparse_request_bytes_per_delta"] = \
+    metrics["sparse_request_bytes_per_delta"] = \
         reqs / chunks_total * PAPER_BYTES["rate"]
-    rep["rate_bytes_ratio"] = rep["dense_rate_bytes_per_delta"] / \
-        max(rep["sparse_rate_bytes_per_delta"], 1.0)
-    rep["total_bytes_ratio"] = rep["dense_rate_bytes_per_delta"] / \
-        max(rep["sparse_rate_bytes_per_delta"]
-            + rep["sparse_request_bytes_per_delta"], 1.0)
+    metrics["rate_bytes_ratio"] = metrics["dense_rate_bytes_per_delta"] / \
+        max(metrics["sparse_rate_bytes_per_delta"], 1.0)
+    metrics["total_bytes_ratio"] = metrics["dense_rate_bytes_per_delta"] / \
+        max(metrics["sparse_rate_bytes_per_delta"]
+            + metrics["sparse_request_bytes_per_delta"], 1.0)
     # the whole point: the push must ship strictly less than the broadcast
     if r > 1:
-        assert rep["total_bytes_ratio"] > 1.0, rep["total_bytes_ratio"]
-    return rep, times
+        assert metrics["total_bytes_ratio"] > 1.0, metrics["total_bytes_ratio"]
+    params = {"num_ranks": r, "n_per_rank": n,
+              "delta": base["rate_period"], "chunks": chunks_total}
+    return params, metrics, sims["sparse"].metrics()
 
 
 def main():
@@ -76,24 +81,30 @@ def main():
     args = [a for a in sys.argv[1:] if not a.startswith("--")]
     n = int(args[0]) if args else (64 if smoke else 256)
     import jax
+    from repro import telemetry
     r = len(jax.devices())
-    rep, times = bench(n)
-    emit(f"fig4_spikes_old_r{r}_n{n}", times["old"] * 1e6)
-    emit(f"fig4_spikes_new_dense_r{r}_n{n}", times["dense"] * 1e6,
-         f"speedup={times['old'] / times['dense']:.2f}x "
-         f"rateB/Delta={rep['dense_rate_bytes_per_delta']:.0f}")
-    emit(f"fig4_spikes_new_sparse_r{r}_n{n}", times["sparse"] * 1e6,
-         f"rate+reqB/Delta={rep['sparse_rate_bytes_per_delta']:.0f}"
-         f"+{rep['sparse_request_bytes_per_delta']:.0f} "
-         f"({rep['total_bytes_ratio']:.1f}x less)")
+    params, m, device_metrics = bench(n)
+    emit(f"fig4_spikes_old_r{r}_n{n}", m["old_steady_us_per_chunk"],
+         f"compile_ms={m['old_compile_ms']:.0f}")
+    emit(f"fig4_spikes_new_dense_r{r}_n{n}", m["dense_steady_us_per_chunk"],
+         f"speedup={m['old_steady_us_per_chunk'] / m['dense_steady_us_per_chunk']:.2f}x "
+         f"rateB/Delta={m['dense_rate_bytes_per_delta']:.0f}")
+    emit(f"fig4_spikes_new_sparse_r{r}_n{n}", m["sparse_steady_us_per_chunk"],
+         f"rate+reqB/Delta={m['sparse_rate_bytes_per_delta']:.0f}"
+         f"+{m['sparse_request_bytes_per_delta']:.0f} "
+         f"({m['total_bytes_ratio']:.1f}x less)")
     if write_json:
         # smoke output goes to its own file: reproducing the CI smoke step
         # locally must not clobber the committed r=4/n=1024 baseline
         out = "BENCH_spikes_smoke.json" if smoke else "BENCH_spikes.json"
-        report = {"smoke": smoke, f"r{r}_n{n}": rep}
-        with open(os.path.join(ROOT, out), "w") as f:
-            json.dump(report, f, indent=2, sort_keys=True)
-            f.write("\n")
+        rep = telemetry.report.make_report(
+            "spikes", {f"r{r}_n{n}": telemetry.report.case(params, m)},
+            smoke=smoke,
+            mesh={"num_ranks": r, "backend": jax.default_backend()},
+            counters=telemetry.report.counters_block(device_metrics),
+            histograms=telemetry.report.histograms_block(device_metrics),
+            spans=telemetry.export())
+        telemetry.report.write(os.path.join(ROOT, out), rep)
 
 
 if __name__ == "__main__":

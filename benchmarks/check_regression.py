@@ -1,0 +1,242 @@
+"""Regression gate: compare a smoke run against the committed
+``BENCH_*.json`` baselines with per-metric thresholds (DESIGN.md §9).
+
+Usage::
+
+    python -m benchmarks.check_regression --smoke [--capture-trace DIR]
+
+``--smoke`` runs every bench family's ``--smoke`` mode in this process's
+device environment (CI sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=4``), producing the ``BENCH_*_smoke.json`` candidates; the
+gate then compares each candidate case against the committed baseline
+(``telemetry.report.normalize`` reads both the v1 schema and the
+pre-schema flat layouts), prints a comparison table, writes the merged
+telemetry report to ``TELEMETRY_smoke.json``, and exits 1 on any
+regression. Without ``--smoke`` it only compares files already on disk.
+
+Rules (``RULES``): scale-free ratio metrics (``*_ratio`` — deterministic
+byte-model/counter ratios) are compared across different problem sizes —
+candidate cases pair with the same-named baseline case when present, else
+with the baseline's smallest-``n_per_rank`` case. Scale-dependent metrics
+(wall times incl. ``walltime_reduction_pct``, byte counts) are only
+compared when the paired cases' shape params (``n_per_rank``,
+``num_ranks``) match exactly. Baselines whose byte model is not
+scale-free down to smoke size (connectivity: a whole-update term that
+shrinks relative to phase B below n=256) commit a smoke-scale case
+captured in the CI gate environment, so the smoke run pairs with it by
+exact name at matched params and every rule applies tightly.
+``--capture-trace DIR`` additionally runs a tiny Simulator under
+``profile_dir=DIR`` so CI archives a real profiler trace artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import os
+import sys
+from dataclasses import dataclass
+from typing import List, Optional
+
+from benchmarks._util import ROOT
+
+BENCHES = {
+    # family -> (module, committed baseline file)
+    "activity": ("benchmarks.bench_activity", "BENCH_activity.json"),
+    "connectivity": ("benchmarks.bench_connectivity",
+                     "BENCH_connectivity.json"),
+    "spikes": ("benchmarks.bench_fig4_spikes", "BENCH_spikes.json"),
+    "fig11": ("benchmarks.bench_fig11_total", "BENCH_fig11.json"),
+}
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One gating rule. ``pattern`` is an fnmatch over metric names;
+    ``higher_better`` sets the regression direction; ``tol_frac`` the
+    allowed fractional slack (0.5 = candidate may be up to 50% worse);
+    ``params_must_match`` restricts the comparison to case pairs whose
+    shape params are identical (scale-dependent metrics)."""
+    pattern: str
+    higher_better: bool
+    tol_frac: float
+    params_must_match: bool
+
+    def check(self, base: float, cand: float) -> bool:
+        """True = OK, False = regression."""
+        if self.higher_better:
+            return cand >= base * (1.0 - self.tol_frac)
+        return cand <= base * (1.0 + self.tol_frac)
+
+
+# first matching rule wins; metrics matching no rule are informational
+RULES = (
+    # scale-free efficiency ratios: the paper's claims. A halving of the
+    # HBM-traffic or byte-volume win is a real regression at any size.
+    # (These are deterministic byte-model/counter ratios, not wall time.)
+    Rule("*_ratio", True, 0.5, False),
+    # scale-dependent wall times: noisy on shared CI — generous slack,
+    # and only ever compared at identical (n_per_rank, num_ranks)
+    Rule("walltime_reduction_pct", True, 1.0, True),
+    Rule("*compile_ms", False, 2.0, True),
+    Rule("*_us_per_*", False, 1.0, True),
+    # scale-dependent measured byte counters: deterministic, tight
+    Rule("*_bytes_per_*", False, 0.25, True),
+    Rule("*_records_per_*", False, 0.25, True),
+)
+
+MATCH_PARAMS = ("n_per_rank", "num_ranks")
+
+
+@dataclass
+class Finding:
+    bench: str
+    case: str
+    metric: str
+    baseline: float
+    candidate: float
+    ok: bool
+    rule: Optional[Rule]
+
+
+def rule_for(metric: str) -> Optional[Rule]:
+    for r in RULES:
+        if fnmatch.fnmatch(metric, r.pattern):
+            return r
+    return None
+
+
+def _pair_case(cand_name: str, cand_case: dict, base_cases: dict):
+    """Baseline case for a candidate case: exact name, else smallest-n."""
+    if cand_name in base_cases:
+        return cand_name, base_cases[cand_name]
+    def n_of(c):
+        return c.get("params", {}).get("n_per_rank", float("inf"))
+    if not base_cases:
+        return None, None
+    name = min(base_cases, key=lambda k: n_of(base_cases[k]))
+    return name, base_cases[name]
+
+
+def compare(bench: str, baseline: dict, candidate: dict) -> List[Finding]:
+    """Compare two *normalized* reports (telemetry.report.normalize).
+    Returns one Finding per gated metric pair."""
+    out: List[Finding] = []
+    for cname, ccase in candidate.get("cases", {}).items():
+        bname, bcase = _pair_case(cname, ccase, baseline.get("cases", {}))
+        if bcase is None:
+            continue
+        bp, cp = bcase.get("params", {}), ccase.get("params", {})
+        params_match = all(bp.get(k) == cp.get(k) for k in MATCH_PARAMS)
+        for metric, cval in ccase.get("metrics", {}).items():
+            if not isinstance(cval, (int, float)) or isinstance(cval, bool):
+                continue
+            bval = bcase.get("metrics", {}).get(metric)
+            if bval is None:
+                continue
+            rule = rule_for(metric)
+            if rule is None:
+                continue
+            if rule.params_must_match and not params_match:
+                continue
+            ok = rule.check(float(bval), float(cval))
+            out.append(Finding(bench, f"{bname}->{cname}", metric,
+                               float(bval), float(cval), ok, rule))
+    return out
+
+
+def run_smoke_benches(families) -> None:
+    """Run each family's --smoke in-process (one Python, shared jax
+    backend/device env — CI sets the host-device count via XLA_FLAGS)."""
+    import importlib
+    for fam in families:
+        module, _ = BENCHES[fam]
+        argv_backup = sys.argv
+        sys.argv = [module, "--smoke"]
+        try:
+            importlib.import_module(module).main()
+        finally:
+            sys.argv = argv_backup
+
+
+def capture_trace(trace_dir: str) -> None:
+    """Run a small Simulator under profile_dir so CI archives a real
+    profiler trace next to the telemetry JSON. The traced run is
+    deliberately tinier than smoke (short rate window, one chunk):
+    interpret-mode Pallas records every emulated op, and tracing a full
+    smoke run overflows the profiler's 2 GB XSpace protobuf."""
+    import dataclasses
+    from repro.configs.msp_brain import SMOKE_CONFIG
+    from repro.sim import Simulator
+    cfg = dataclasses.replace(SMOKE_CONFIG, rate_period=10)
+    sim = Simulator(cfg, profile_dir=trace_dir)
+    sim.run(1)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="run every bench family's --smoke first")
+    ap.add_argument("--families", default=",".join(BENCHES),
+                    help="comma-separated subset of bench families")
+    ap.add_argument("--out", default=os.path.join(ROOT,
+                                                  "TELEMETRY_smoke.json"))
+    ap.add_argument("--capture-trace", default=None, metavar="DIR",
+                    help="also capture a jax.profiler trace of a smoke run")
+    args = ap.parse_args(argv)
+    families = [f for f in args.families.split(",") if f in BENCHES]
+
+    from repro import telemetry
+
+    if args.smoke:
+        run_smoke_benches(families)
+    if args.capture_trace:
+        capture_trace(args.capture_trace)
+
+    findings: List[Finding] = []
+    merged_cases = {}
+    compared = []
+    for fam in families:
+        _, base_file = BENCHES[fam]
+        base_path = os.path.join(ROOT, base_file)
+        cand_path = os.path.join(
+            ROOT, base_file.replace(".json", "_smoke.json"))
+        if not os.path.exists(cand_path):
+            continue
+        cand = telemetry.report.normalize(
+            telemetry.report.load(cand_path), bench=fam)
+        for cname, ccase in cand["cases"].items():
+            merged_cases[f"{fam}/{cname}"] = ccase
+        if not os.path.exists(base_path):
+            print(f"[check_regression] {fam}: no baseline {base_file} — "
+                  "skipped", flush=True)
+            continue
+        base = telemetry.report.normalize(
+            telemetry.report.load(base_path), bench=fam)
+        findings.extend(compare(fam, base, cand))
+        compared.append(fam)
+
+    bad = [f for f in findings if not f.ok]
+    header = f"{'bench':<14}{'case':<18}{'metric':<34}" \
+             f"{'baseline':>12}{'smoke':>12}  verdict"
+    print(header)
+    print("-" * len(header))
+    for f in findings:
+        print(f"{f.bench:<14}{f.case:<18}{f.metric:<34}"
+              f"{f.baseline:>12.1f}{f.candidate:>12.1f}  "
+              f"{'ok' if f.ok else 'REGRESSION'}")
+    print(f"\n[check_regression] {len(findings)} metrics gated across "
+          f"{compared or 'no'} families; {len(bad)} regression(s)")
+
+    rep = telemetry.report.make_report(
+        "regression", merged_cases, smoke=True,
+        spans=telemetry.export())
+    rep["findings"] = [{
+        "bench": f.bench, "case": f.case, "metric": f.metric,
+        "baseline": f.baseline, "candidate": f.candidate, "ok": f.ok,
+    } for f in findings]
+    telemetry.report.write(args.out, rep)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

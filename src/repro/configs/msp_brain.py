@@ -67,6 +67,9 @@ class BrainConfig:
     # bit-identical to the reference (shared core math + counter-hash PRNG;
     # DESIGN.md §6). Works with either connectivity_alg.
     connectivity_impl: str = "reference"
+    # length of the device-side per-chunk metrics ring (telemetry.metrics:
+    # per-Delta counter increments at chunk % history; DESIGN.md §9)
+    metrics_history: int = 64
     seed: int = 0
 
     def __post_init__(self):

@@ -220,7 +220,10 @@ def bh_search(tree: StackedTree, x, src_gid, start_cell, *, seed: int, chunk,
     a deepest-level cell is returned (paper's 'process restarts' loop).
 
     x: (Q,3); src_gid: (Q,) searcher gids (PRNG entities); start_cell: (Q,)
-    cell at tree level 0. Returns (leaf_cell (Q,), valid (Q,), overflow (Q,)).
+    cell at tree level 0. Returns (leaf_cell (Q,), valid (Q,), overflow (Q,),
+    depth (Q,) i32 — expand/sample rounds executed before the query settled,
+    the paper's 'process restarts' count; fed to the telemetry frontier-depth
+    histogram).
     """
     q = x.shape[0]
     last = n_levels - 1
@@ -228,7 +231,7 @@ def bh_search(tree: StackedTree, x, src_gid, start_cell, *, seed: int, chunk,
     _check_caps(frontier, round_base, restarts)
 
     def body(i, st):
-        cell, rel, valid, done, overflow = st
+        cell, rel, valid, done, overflow, depth = st
         ncell, nrel, nvalid, noverf = expand_and_sample(
             tree, x, cell, rel, src_gid, round_base + i, seed=seed,
             chunk=chunk, theta=theta, sigma=sigma, frontier=frontier,
@@ -238,14 +241,17 @@ def bh_search(tree: StackedTree, x, src_gid, start_cell, *, seed: int, chunk,
         rel = jnp.where(done, rel, nrel)
         valid = jnp.where(done, valid, nvalid)
         overflow = overflow | jnp.where(done, False, noverf)
+        depth = depth + jnp.where(done, 0, 1).astype(jnp.int32)
         done = done | (rel >= last) | ~valid
-        return (cell, rel, valid, done, overflow)
+        return (cell, rel, valid, done, overflow, depth)
 
     st = (start_cell.astype(jnp.int32), jnp.zeros((q,), jnp.int32),
-          jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), bool))
-    cell, rel, valid, done, overflow = jax.lax.fori_loop(0, restarts, body, st)
+          jnp.ones((q,), bool), jnp.zeros((q,), bool), jnp.zeros((q,), bool),
+          jnp.zeros((q,), jnp.int32))
+    cell, rel, valid, done, overflow, depth = jax.lax.fori_loop(
+        0, restarts, body, st)
     valid = valid & (rel >= last)
-    return cell, valid, overflow
+    return cell, valid, overflow, depth
 
 
 def select_member(x, member_pos, member_weight, member_valid, src_gid, *,
@@ -278,7 +284,7 @@ def phase_a(top, pos, src_gid, cfg, num_ranks: int, *, chunk):
         q = pos.shape[0]
         return jnp.zeros((q,), jnp.int32), jnp.ones((q,), bool)
     tree = stack_levels(top.counts, top.centroids, 0)
-    cell, valid, _ = bh_search(
+    cell, valid, _, _ = bh_search(
         tree, pos, src_gid, jnp.zeros((pos.shape[0],), jnp.int32),
         seed=cfg.seed, chunk=chunk, theta=cfg.theta, sigma=cfg.sigma,
         frontier=cfg.frontier_cap, n_levels=b + 1,
@@ -302,9 +308,9 @@ def phase_b_core(counts, cents, leaf_members, neuron_pos, vacant_d, x,
     edge lengths; leaf_members: (n_leaf, M); neuron_pos/vacant_d: the
     subtree's neuron data; x/start_cell_rel/src_gid/valid_in: (Q, ...)
     queries; chunk/gid_base: traced i32 scalars.
-    Returns (target_gid (Q,), valid (Q,))."""
+    Returns (target_gid (Q,), valid (Q,), depth (Q,) i32 restart rounds)."""
     tree = StackedTree(counts, cents, tuple(sizes), 0)
-    leaf_cell, valid, _ = bh_search(
+    leaf_cell, valid, _, depth = bh_search(
         tree, x, src_gid, start_cell_rel, seed=seed, chunk=chunk, theta=theta,
         sigma=sigma, frontier=frontier, n_levels=n_levels,
         round_base=PHASE_B_ROUND_BASE)
@@ -322,7 +328,7 @@ def phase_b_core(counts, cents, leaf_members, neuron_pos, vacant_d, x,
     tgt_local = jnp.take_along_axis(msafe, pick[:, None], axis=1)[:, 0]
     tgt_gid = gid_base + tgt_local
     ok = valid & pvalid
-    return jnp.where(ok, tgt_gid, -1), ok
+    return jnp.where(ok, tgt_gid, -1), ok, depth
 
 
 @registry.register_phase("traversal", "reference")

@@ -41,18 +41,18 @@ def formation_phase_new(ctx, state, local_tree, vac_d_pos, out_edges,
                         valid_a, k_accept, stats):
     """Paper's NEW algorithm: ship 42B formation-and-calculation requests
     to the rank that owns the target subtree (move compute to the data)."""
-    tgt_gid, accept, ovf = routing.formation_new(
+    tgt_gid, accept, ovf, (depth, processed) = routing.formation_new(
         ctx.cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
         branch_cell, owner, start_rel, valid_a, ctx.rank, ctx.axis_name,
         ctx.num_ranks, k_accept, state.chunk)
     in_edges = accept.pop("in_edges")
-    stats = dict(stats)
-    stats["request_overflow"] = stats["request_overflow"] + ovf
-    stats["bh_responses"] = stats["bh_responses"] + jnp.sum(
-        accept["accepted"])
+    stats = stats.count("request_overflow", ovf)
+    stats = stats.count("bh_responses", jnp.sum(accept["accepted"]))
+    # restart depths of the phase-B searches THIS rank executed (the
+    # received requests) — identical under both traversal lowerings
+    stats = ctx.metrics.traversal(stats, depth, processed)
     out_edges = syn.add_out_edges(out_edges, tgt_gid, accept["accepted"])
-    stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(
-        accept["accepted"])
+    stats = stats.count("synapses_formed", jnp.sum(accept["accepted"]))
     return out_edges, in_edges, stats
 
 
@@ -62,15 +62,16 @@ def formation_phase_old(ctx, state, local_tree, vac_d_pos, out_edges,
                         valid_a, k_accept, stats):
     """Paper's OLD baseline: download every remote subtree + leaf neuron
     data ("RMA download with caching") and finish the search locally."""
-    tgt_gid, accepted, new_in, downloaded = routing.formation_old(
-        ctx.cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
-        branch_cell, valid_a, ctx.rank, ctx.axis_name, ctx.num_ranks,
-        k_accept, state.chunk)
+    tgt_gid, accepted, new_in, downloaded, (depth, searched) = \
+        routing.formation_old(
+            ctx.cfg, state.positions, local_tree, vac_d_pos, in_edges, gids,
+            branch_cell, valid_a, ctx.rank, ctx.axis_name, ctx.num_ranks,
+            k_accept, state.chunk)
     out_edges = syn.add_out_edges(out_edges, tgt_gid, accepted)
-    stats = dict(stats)
-    stats["tree_nodes_downloaded"] = stats["tree_nodes_downloaded"] \
-        + downloaded
-    stats["synapses_formed"] = stats["synapses_formed"] + jnp.sum(accepted)
+    stats = stats.count("tree_nodes_downloaded", downloaded)
+    # restart depths of MY searchers against the downloaded global tree
+    stats = ctx.metrics.traversal(stats, depth, searched)
+    stats = stats.count("synapses_formed", jnp.sum(accepted))
     return out_edges, new_in, stats
 
 
@@ -84,8 +85,7 @@ def exchange_dense(ctx, state, neurons, in_edges, stats):
                                         ctx.num_ranks)
     # every rank broadcasts its full n rates to the other R-1 ranks —
     # rates_sent counts rate records actually shipped over the wire
-    stats = dict(stats, rates_sent=stats["rates_sent"]
-                 + float(n * max(ctx.num_ranks - 1, 0)))
+    stats = stats.count("rates_sent", float(n * max(ctx.num_ranks - 1, 0)))
     return rates_table, state.subs, state.rate_slots, state.remote_rates, \
         stats
 
@@ -98,19 +98,21 @@ def exchange_sparse(ctx, state, neurons, in_edges, stats):
     exactly the subscribed rates — O(unique remote sources) instead of
     O(R*n)."""
     cfg, n = ctx.cfg, ctx.cfg.neurons_per_rank
-    stats = dict(stats)
     subs, rate_slots, ovf = spikes.build_subscriptions(
         in_edges, ctx.rank, n, routing.cap_subs(cfg, ctx.num_ranks))
     # counted both in the aggregate drop counter and in a dedicated key
     # (benchmarks must not infer it from the shared aggregate)
-    stats["request_overflow"] = stats["request_overflow"] + ovf
-    stats["subscription_overflow"] = stats["subscription_overflow"] + ovf
+    stats = stats.count("request_overflow", ovf)
+    stats = stats.count("subscription_overflow", ovf)
+    # one registry-occupancy histogram entry per chunk (sparse only —
+    # the dense layout has no registry and leaves the histogram zero)
+    stats = ctx.metrics.subs_occupancy(stats, subs, spikes.NO_SUB)
     remote_rates, pushed = routing.push_subscribed_rates(
         subs, neurons.rate, ctx.axis_name, ctx.num_ranks, n)
     # the exchange ships one 4B request id out AND one 4B rate back per
     # subscription — both streams are counted (Tables I/II honesty)
-    stats["subscription_requests"] = stats["subscription_requests"] + pushed
-    stats["rates_sent"] = stats["rates_sent"] + pushed
+    stats = stats.count("subscription_requests", pushed)
+    stats = stats.count("rates_sent", pushed)
     return state.rates_table, subs, rate_slots, remote_rates, stats
 
 
@@ -131,7 +133,7 @@ def connectivity_update(state, ctx):
     chunk_key = jax.random.fold_in(jax.random.key(cfg.seed + 2), state.chunk)
     gid0 = rank * n
     gids = gid0 + jnp.arange(n, dtype=jnp.int32)
-    stats = dict(state.stats)
+    stats = state.stats          # telemetry.metrics.Metrics (immutable)
 
     # lesion mask at the update instant (the step right after this chunk's
     # activity scan). Applied BEFORE the algorithm branch so 'old' and 'new'
@@ -147,37 +149,42 @@ def connectivity_update(state, ctx):
             de_elements=jnp.where(alive, state.neurons.de_elements, 0.0)))
 
     # ---- deletion by retraction (phase 3a) -------------------------------
-    out_edges, in_edges = state.out_edges, state.in_edges
-    out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
-    del_out = jnp.maximum(
-        out_cnt - jnp.floor(state.neurons.ax_elements).astype(jnp.int32), 0)
-    del_in = jnp.maximum(
-        in_cnt - jnp.floor(state.neurons.de_elements).astype(jnp.int32), 0)
-    k_out, k_in, k_accept = jax.random.split(chunk_key, 3)
-    out_edges, kill_out = syn.retract_synapses(k_out, out_edges, del_out,
-                                               gids)
-    in_edges, kill_in = syn.retract_synapses(k_in, in_edges, del_in, gids)
-    stats["synapses_deleted"] = stats["synapses_deleted"] + \
-        jnp.sum(kill_out) + jnp.sum(kill_in)
+    with jax.named_scope("repro.conn.retraction"):
+        out_edges, in_edges = state.out_edges, state.in_edges
+        out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
+        del_out = jnp.maximum(
+            out_cnt - jnp.floor(state.neurons.ax_elements).astype(jnp.int32),
+            0)
+        del_in = jnp.maximum(
+            in_cnt - jnp.floor(state.neurons.de_elements).astype(jnp.int32),
+            0)
+        k_out, k_in, k_accept = jax.random.split(chunk_key, 3)
+        out_edges, kill_out = syn.retract_synapses(k_out, out_edges, del_out,
+                                                   gids)
+        in_edges, kill_in = syn.retract_synapses(k_in, in_edges, del_in, gids)
+        stats = stats.count("synapses_deleted",
+                            jnp.sum(kill_out) + jnp.sum(kill_in))
 
-    # notify partners; kill masks index the PRE-retraction tables
-    lesions = proto.has_lesions(ctx.scenario)
-    msgs_out, ovf_out = routing.route_deletions(
-        kill_out, state.out_edges, gids[:, None], cfg, axis_name, num_ranks,
-        lesions)
-    msgs_in, ovf_in = routing.route_deletions(
-        kill_in, state.in_edges, gids[:, None], cfg, axis_name, num_ranks,
-        lesions)
-    # dropped notifications leave stale partner edges — surface them
-    stats["request_overflow"] = stats["request_overflow"] + ovf_out + ovf_in
-    # apply: partner of my out-edge removes its in-edge, and vice versa
-    in_edges = syn.remove_edges_by_messages(
-        in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1), msgs_out[:, 1],
-        (msgs_out[:, 0] >= gid0) & (msgs_out[:, 0] < gid0 + n))
-    out_edges = syn.remove_edges_by_messages(
-        out_edges, jnp.clip(msgs_in[:, 0] - gid0, 0, n - 1), msgs_in[:, 1],
-        (msgs_in[:, 0] >= gid0) & (msgs_in[:, 0] < gid0 + n))
-    out_edges, in_edges = syn.compact(out_edges), syn.compact(in_edges)
+        # notify partners; kill masks index the PRE-retraction tables
+        lesions = proto.has_lesions(ctx.scenario)
+        msgs_out, ovf_out = routing.route_deletions(
+            kill_out, state.out_edges, gids[:, None], cfg, axis_name,
+            num_ranks, lesions)
+        msgs_in, ovf_in = routing.route_deletions(
+            kill_in, state.in_edges, gids[:, None], cfg, axis_name, num_ranks,
+            lesions)
+        # dropped notifications leave stale partner edges — surface them
+        stats = stats.count("request_overflow", ovf_out + ovf_in)
+        # apply: partner of my out-edge removes its in-edge, and vice versa
+        in_edges = syn.remove_edges_by_messages(
+            in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1),
+            msgs_out[:, 1],
+            (msgs_out[:, 0] >= gid0) & (msgs_out[:, 0] < gid0 + n))
+        out_edges = syn.remove_edges_by_messages(
+            out_edges, jnp.clip(msgs_in[:, 0] - gid0, 0, n - 1),
+            msgs_in[:, 1],
+            (msgs_in[:, 0] >= gid0) & (msgs_in[:, 0] < gid0 + n))
+        out_edges, in_edges = syn.compact(out_edges), syn.compact(in_edges)
 
     # ---- formation (phase 3b) --------------------------------------------
     out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
@@ -185,31 +192,35 @@ def connectivity_update(state, ctx):
     vac_d = state.neurons.de_elements - in_cnt.astype(jnp.float32)
     vac_d_pos = jnp.maximum(vac_d, 0.0)
 
-    local_tree = ctree.build_local_tree(state.positions, vac_d_pos, rank,
-                                        cfg, num_ranks)
-    top = ctree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
+    with jax.named_scope("repro.conn.tree_build"):
+        local_tree = ctree.build_local_tree(state.positions, vac_d_pos, rank,
+                                            cfg, num_ranks)
+        top = ctree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
+        stats = ctx.metrics.tree_built(stats, local_tree)
 
     searching = vac_a >= 1
     if alive is not None:
         # dead neurons neither search for partners nor offer vacancies
         searching = searching & alive
         vac_d_pos = jnp.where(alive, vac_d_pos, 0.0)
-    branch_cell, valid_a = traverse.phase_a(top, state.positions, gids, cfg,
-                                            num_ranks, chunk=state.chunk)
+    with jax.named_scope("repro.conn.phase_a"):
+        branch_cell, valid_a = traverse.phase_a(top, state.positions, gids,
+                                                cfg, num_ranks,
+                                                chunk=state.chunk)
     valid_a = valid_a & searching
     c_per = morton.cells_per_rank(num_ranks)
     owner = jnp.clip(branch_cell // c_per, 0, num_ranks - 1)
     start_rel = branch_cell - owner * c_per
-    stats["bh_requests"] = stats["bh_requests"] + jnp.sum(valid_a)
+    stats = stats.count("bh_requests", jnp.sum(valid_a))
     # either algorithm sends one formation request per valid searcher (17 B
     # plain / 42 B formation-and-calculation — Tables I/II accounting)
-    stats["formation_requests"] = stats["formation_requests"] + jnp.sum(
-        valid_a)
+    stats = stats.count("formation_requests", jnp.sum(valid_a))
 
     formation = registry.resolve("connectivity", cfg.connectivity_alg)
-    out_edges, in_edges, stats = formation(
-        ctx, state, local_tree, vac_d_pos, out_edges, in_edges, gids,
-        branch_cell, owner, start_rel, valid_a, k_accept, stats)
+    with jax.named_scope("repro.conn.formation"):
+        out_edges, in_edges, stats = formation(
+            ctx, state, local_tree, vac_d_pos, out_edges, in_edges, gids,
+            branch_cell, owner, start_rel, valid_a, k_accept, stats)
 
     # ---- rate refresh + Delta-periodic exchange (phase 3c) ---------------
     neurons = refresh_rate(state.neurons, cfg, alive)
@@ -220,8 +231,9 @@ def connectivity_update(state, ctx):
         # (on the old spike path the rate state is dead — skip the
         # per-chunk exchange and its accounting entirely)
         exchange = registry.resolve("rate_exchange", cfg.rate_exchange)
-        rates_table, subs, rate_slots, remote_rates, stats = exchange(
-            ctx, state, neurons, in_edges, stats)
+        with jax.named_scope("repro.conn.exchange"):
+            rates_table, subs, rate_slots, remote_rates, stats = exchange(
+                ctx, state, neurons, in_edges, stats)
     return state._replace(neurons=neurons, out_edges=out_edges,
                           in_edges=in_edges, rates_table=rates_table,
                           subs=subs, rate_slots=rate_slots,

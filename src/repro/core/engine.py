@@ -42,11 +42,11 @@ from repro.core import morton, spikes
 from repro.core.neuron import NeuronParams, NeuronState, init_neurons
 from repro.scenarios import populations as pops
 from repro.sim import phases as sim_phases
+from repro.telemetry import metrics as telemetry_metrics
 
-STAT_KEYS = ("spikes_sent", "rates_sent", "subscription_requests",
-             "subscription_overflow", "bh_requests", "bh_responses",
-             "formation_requests", "synapses_formed", "synapses_deleted",
-             "tree_nodes_downloaded", "request_overflow")
+# every device-side counter key (legacy byte accounting + per-phase work
+# counters) — the single source of truth lives in repro.telemetry.metrics
+STAT_KEYS = telemetry_metrics.COUNTER_KEYS
 
 
 class BrainState(NamedTuple):
@@ -70,7 +70,7 @@ class BrainState(NamedTuple):
     remote_rates: jnp.ndarray    # (subs_cap,) pushed rates aligned with
                                  # subs (sparse) | None
     chunk: jnp.ndarray           # scalar i32
-    stats: dict
+    stats: "telemetry_metrics.Metrics"   # per-rank counters/rings/hists
 
 
 _RANKS = P("ranks")
@@ -99,7 +99,8 @@ def state_specs(state) -> BrainState:
         rate_slots=opt(state.rate_slots, P("ranks", None)),   # (n, S)
         remote_rates=opt(state.remote_rates, _RANKS),
         chunk=P(),                        # replicated scalar step counter
-        stats={k: _RANKS for k in state.stats},    # (1,) per-rank counters
+        # the metrics tree: every leaf per-rank on its leading axis
+        stats=telemetry_metrics.metrics_specs(state.stats),
     )
 
 
@@ -121,8 +122,9 @@ def init_state(cfg: BrainConfig, rank, num_ranks: int,
     neurons = init_neurons(kn, cfg, n, params=_neuron_params(table),
                            is_excitatory=table.is_excitatory)
     syn = init_synapses(n, cfg.max_synapses)
-    # (1,)-shaped per-rank counters: sharded over 'ranks', summed at read time
-    stats = {k: jnp.zeros((1,), jnp.float32) for k in STAT_KEYS}
+    # the telemetry tree: (1,)-leading per-rank leaves, sharded over 'ranks';
+    # reductions happen at read time (Simulator.stats / .metrics), on device
+    stats = telemetry_metrics.init_metrics(cfg.metrics_history)
     rates_table = subs = rate_slots = remote_rates = None
     if cfg.rate_exchange == "dense":
         rates_table = jnp.zeros((num_ranks, n), jnp.float32)

@@ -170,6 +170,7 @@ def _window_kernel(*refs, n_in, num_steps, seed, ca_consts, n, stim_meta,
                    lesion_meta, has_slots):
     t = pl.program_id(0)
     outs = refs[n_in:n_in + _N_STATE]
+    spk_ref = refs[n_in + _N_STATE]   # (1,) block of the (T,) per-step counts
 
     @pl.when(t == 0)
     def _init():   # noqa: ANN202 — Delta-resident state: load once per window
@@ -206,6 +207,9 @@ def _window_kernel(*refs, n_in, num_steps, seed, ca_consts, n, stim_meta,
                     stim=stim, lesions=lesions, rate_slots=rate_slots)
     for o, val in zip(outs, new):
         o[...] = val
+    # this step's fired count — the same reduction the reference scan emits
+    # as its ys (telemetry spikes-per-step; bit-identity by construction)
+    spk_ref[...] = jnp.sum(new[5].astype(jnp.float32))[None]
 
 
 def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
@@ -222,7 +226,11 @@ def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
     instead of O(R·n)); bg_mean/bg_std: scalar or (n,); chunk/rank: traced
     i32 scalars; izh: 6-tuple, scalar or (n,); stim/lesions: protocol
     tables (see ``scenarios.protocol.stim_tables``/``lesion_tables``).
-    Returns the updated 7-tuple (inputs donated via input_output_aliases)."""
+    Returns ``(state7, spikes_per_step)`` — the updated 7-tuple (inputs
+    donated via input_output_aliases) plus the (num_steps,) f32 per-step
+    fired counts (each grid step writes one slot of an unaliased output;
+    the telemetry spikes-per-step signal, identical to the reference scan's
+    per-step reduction)."""
     n = state[0].shape[0]
     s_max = in_edges.shape[1]
     f32 = jnp.float32
@@ -261,23 +269,26 @@ def activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,
 
     out_shape = [jax.ShapeDtypeStruct((n,), f32)] * 5 + \
         [jax.ShapeDtypeStruct((n,), jnp.bool_),
-         jax.ShapeDtypeStruct((n,), f32)]
+         jax.ShapeDtypeStruct((n,), f32),
+         jax.ShapeDtypeStruct((num_steps,), f32)]   # per-step fired counts
     kernel = functools.partial(
         _window_kernel, n_in=len(operands), num_steps=num_steps, seed=seed,
         ca_consts=(float(ca_consts[0]), float(ca_consts[1])), n=n,
         stim_meta=stim_meta, lesion_meta=lesion_meta,
         has_slots=rate_slots is not None)
-    return pl.pallas_call(
+    res = pl.pallas_call(
         kernel, grid=(num_steps,), in_specs=in_specs,
-        out_specs=[row] * _N_STATE, out_shape=out_shape,
+        out_specs=[row] * _N_STATE + [pl.BlockSpec((1,), lambda t: (t,))],
+        out_shape=out_shape,
         input_output_aliases={i: i for i in range(_N_STATE)},
         interpret=interpret,
     )(*operands)
+    return tuple(res[:_N_STATE]), res[_N_STATE]
 
 
 def window_hbm_bytes(n: int, s_max: int, num_ranks: int,
                      num_stim: int = 0, num_lesions: int = 0, *,
-                     subs_cap=None) -> int:
+                     subs_cap=None, num_steps: int = 100) -> int:
     """Analytic HBM traffic of one fused window on TPU: each operand is
     streamed HBM->VMEM once and the 7 state outputs written back once —
     there are no per-step HBM temporaries (that is the point). Used by
@@ -286,7 +297,8 @@ def window_hbm_bytes(n: int, s_max: int, num_ranks: int,
 
     ``subs_cap=None`` models the dense exchange (the replicated (R, n)
     rates table streams in); an integer models the sparse exchange (the
-    compact (subs_cap,) rate buffer plus the (n, s_max) slot remap)."""
+    compact (subs_cap,) rate buffer plus the (n, s_max) slot remap);
+    ``num_steps`` sizes the (T,) per-step spike-count telemetry output."""
     state_in = 6 * 4 * n + n                 # 6 f32 vectors + bool spiked
     if subs_cap is None:
         rate_bytes = num_ranks * n * 4       # dense (R, n) table
@@ -300,4 +312,5 @@ def window_hbm_bytes(n: int, s_max: int, num_ranks: int,
               + 8                            # chunk, rank
               + num_stim * 4 * n + num_lesions * n)
     state_out = state_in
-    return state_in + tables + state_out
+    spk_out = 4 * num_steps                  # (T,) per-step fired counts
+    return state_in + tables + state_out + spk_out

@@ -30,17 +30,18 @@ from repro.connectome.traverse import phase_b_core
 
 
 def _kernel(counts_ref, cents_ref, members_ref, npos_ref, vac_ref, x_ref,
-            start_ref, gid_ref, valid_ref, scal_ref, tgt_ref, ok_ref, *,
-            seed, sizes, theta, sigma, frontier, n_levels):
+            start_ref, gid_ref, valid_ref, scal_ref, tgt_ref, ok_ref,
+            depth_ref, *, seed, sizes, theta, sigma, frontier, n_levels):
     chunk = scal_ref[0]
     gid_base = scal_ref[1]
-    tgt, ok = phase_b_core(
+    tgt, ok, depth = phase_b_core(
         counts_ref[...], cents_ref[...], members_ref[...], npos_ref[...],
         vac_ref[...], x_ref[...], start_ref[...], gid_ref[...],
         valid_ref[...], chunk, gid_base, seed=seed, sizes=sizes, theta=theta,
         sigma=sigma, frontier=frontier, n_levels=n_levels)
     tgt_ref[...] = tgt.astype(jnp.int32)
     ok_ref[...] = ok
+    depth_ref[...] = depth.astype(jnp.int32)
 
 
 def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
@@ -52,7 +53,8 @@ def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
     counts: (L, C) f32; cents: (L, C, 3) f32; members: (n_leaf, M) i32;
     npos: (N, 3) f32; vac: (N,) f32; x: (Q, 3); start_cell/src_gid: (Q,)
     i32; valid: (Q,) bool; chunk/gid_base: traced i32 scalars; sizes: static
-    per-level cell edge lengths. Returns (target_gid (Q,) i32, valid (Q,)).
+    per-level cell edge lengths. Returns (target_gid (Q,) i32, valid (Q,),
+    depth (Q,) i32 restart rounds — the telemetry frontier-depth signal).
 
     Q that is not a multiple of the block is padded up to it (padded rows
     carry valid=False and are sliced off — same fix as ``neuron_step``)."""
@@ -72,18 +74,19 @@ def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
     kern = functools.partial(_kernel, seed=seed, sizes=tuple(sizes),
                              theta=theta, sigma=sigma, frontier=frontier,
                              n_levels=n_levels)
-    tgt, ok = pl.pallas_call(
+    tgt, ok, depth = pl.pallas_call(
         kern,
         grid=(qp // bq,),
         in_specs=[full(counts), full(cents), full(members), full(npos),
                   full(vac), pl.BlockSpec((bq, 3), lambda i: (i, 0)),
                   row, row, row, pl.BlockSpec((2,), lambda i: (0,))],
-        out_specs=[row, row],
+        out_specs=[row, row, row],
         out_shape=[jax.ShapeDtypeStruct((qp,), jnp.int32),
-                   jax.ShapeDtypeStruct((qp,), jnp.bool_)],
+                   jax.ShapeDtypeStruct((qp,), jnp.bool_),
+                   jax.ShapeDtypeStruct((qp,), jnp.int32)],
         interpret=interpret,
     )(counts, cents, members, npos, vac, x, start_cell, src_gid, valid, scal)
-    return (tgt[:q], ok[:q]) if qp != q else (tgt, ok)
+    return (tgt[:q], ok[:q], depth[:q]) if qp != q else (tgt, ok, depth)
 
 
 def traverse_hbm_bytes(n_levels: int, c_max: int, n_leaf: int,
@@ -98,5 +101,5 @@ def traverse_hbm_bytes(n_levels: int, c_max: int, n_leaf: int,
     leaf = n_leaf * members_cap * 4
     neurons = n * 3 * 4 + n * 4
     queries = q * 3 * 4 + q * 4 + q * 4 + q + 8
-    outs = q * 4 + q
+    outs = q * 4 + q + q * 4   # target gid + valid + telemetry depth
     return tree + leaf + neurons + queries + outs

@@ -40,7 +40,8 @@ def activity_window_ref(state, in_edges, w_table, rates, bg_mean, bg_std,
                         ca_consts, stim=None, lesions=None, rate_slots=None):
     """jnp oracle for ``activity_fused.activity_window``: the same
     ``step_core`` math scanned over the window with ``jax.lax.scan``.
-    The Pallas kernel must match this bit-for-bit in interpret mode
+    Returns ``(state7, spikes_per_step)`` like the kernel does. The Pallas
+    kernel must match this bit-for-bit in interpret mode
     (tests/test_activity_fused.py)."""
     from repro.kernels.activity_fused import step_core
     n = state[0].shape[0]
@@ -50,11 +51,11 @@ def activity_window_ref(state, in_edges, w_table, rates, bg_mean, bg_std,
         new = step_core(carry, in_edges, w_table, rates, bg_mean, bg_std,
                         izh, ca_consts, seed, chunk * num_steps + t, rank,
                         n, stim=stim, lesions=lesions, rate_slots=rate_slots)
-        return new, None
+        return new, jnp.sum(new[5].astype(jnp.float32))
 
-    out, _ = jax.lax.scan(step, tuple(state),
-                          jnp.arange(num_steps, dtype=jnp.int32))
-    return out
+    out, spikes_per_step = jax.lax.scan(step, tuple(state),
+                                        jnp.arange(num_steps, dtype=jnp.int32))
+    return out, spikes_per_step
 
 
 def neuron_step_ref(v, u, ca, ax, de, inp, cfg, params=None):

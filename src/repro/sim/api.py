@@ -23,6 +23,7 @@ import jax
 from jax.sharding import NamedSharding
 
 from repro import compat
+from repro import telemetry
 from repro.checkpoint import manager
 from repro.core import engine
 from repro.scenarios import observables
@@ -37,47 +38,58 @@ class Simulator:
     >>> sim = Simulator.from_config(cfg, scenario=scn)   # mesh + init
     >>> sim.run(20)                                      # one fused scan
     >>> sim.stats()["synapses_formed"]
+
+    Observability: every public entry point runs under a
+    ``telemetry.span`` (wall-clock records + jax.profiler trace
+    annotations; read back via ``telemetry.spans()``), and
+    ``profile_dir=...`` wraps every ``run`` in a profiler capture
+    (one trace directory per run, viewable in Perfetto/XProf).
     """
 
-    def __init__(self, cfg, scenario=None, mesh=None):
+    def __init__(self, cfg, scenario=None, mesh=None, profile_dir=None):
         # cfg was validated eagerly in BrainConfig.__post_init__ (registry
         # .check_config); here we only make sure every @register_phase
         # decorator has run before the first resolve() inside a trace
         registry.ensure_loaded()
         self.cfg = cfg
         self.scenario = scenario
+        self.profile_dir = profile_dir
         self.mesh = mesh if mesh is not None else engine.make_brain_mesh()
         self.num_ranks = self.mesh.shape["ranks"]
-        shapes = jax.eval_shape(
-            lambda: engine.init_state(cfg, 0, self.num_ranks, scenario))
-        self.specs = engine.state_specs(shapes)
+        with telemetry.span("sim.construct", ranks=self.num_ranks,
+                            n=cfg.neurons_per_rank):
+            shapes = jax.eval_shape(
+                lambda: engine.init_state(cfg, 0, self.num_ranks, scenario))
+            self.specs = engine.state_specs(shapes)
 
-        def init_body():
-            rank = jax.lax.axis_index("ranks")
-            return engine.init_state(cfg, rank, self.num_ranks, scenario)
+            def init_body():
+                rank = jax.lax.axis_index("ranks")
+                return engine.init_state(cfg, rank, self.num_ranks, scenario)
 
-        self.init_fn = jax.jit(compat.shard_map(
-            init_body, mesh=self.mesh, in_specs=(), out_specs=self.specs,
-            check_vma=False))
+            self.init_fn = jax.jit(compat.shard_map(
+                init_body, mesh=self.mesh, in_specs=(), out_specs=self.specs,
+                check_vma=False))
 
-        def chunk_body(st):
-            rank = jax.lax.axis_index("ranks")
-            ctx = sim_phases.make_context(cfg, rank, "ranks",
-                                          self.num_ranks, scenario)
-            return sim_phases.sim_chunk(st, ctx)
+            def chunk_body(st):
+                rank = jax.lax.axis_index("ranks")
+                ctx = sim_phases.make_context(cfg, rank, "ranks",
+                                              self.num_ranks, scenario)
+                return sim_phases.sim_chunk(st, ctx)
 
-        # the un-jitted shard_map'd chunk: `step` jits it directly, `run`
-        # scans it — both drive the SAME traced computation
-        self._chunk_shard = compat.shard_map(
-            chunk_body, mesh=self.mesh, in_specs=(self.specs,),
-            out_specs=self.specs, check_vma=False)
-        self.chunk_fn = jax.jit(self._chunk_shard, donate_argnums=(0,))
-        self._run_cache = {}
-        self._state = None
+            # the un-jitted shard_map'd chunk: `step` jits it directly,
+            # `run` scans it — both drive the SAME traced computation
+            self._chunk_shard = compat.shard_map(
+                chunk_body, mesh=self.mesh, in_specs=(self.specs,),
+                out_specs=self.specs, check_vma=False)
+            self.chunk_fn = jax.jit(self._chunk_shard, donate_argnums=(0,))
+            self._run_cache = {}
+            self._state = None
 
     @classmethod
-    def from_config(cls, cfg, scenario=None, mesh=None) -> "Simulator":
-        return cls(cfg, scenario=scenario, mesh=mesh)
+    def from_config(cls, cfg, scenario=None, mesh=None,
+                    profile_dir=None) -> "Simulator":
+        return cls(cfg, scenario=scenario, mesh=mesh,
+                   profile_dir=profile_dir)
 
     # ------------------------------------------------------------ state
     @property
@@ -85,18 +97,20 @@ class Simulator:
         """The current BrainState (global sharded arrays); initializes on
         first access."""
         if self._state is None:
-            self._state = self.init_fn()
+            self.init()
         return self._state
 
     def init(self):
         """(Re)initialize from cfg.seed and return the fresh state."""
-        self._state = self.init_fn()
+        with telemetry.span("sim.init"):
+            self._state = self.init_fn()
         return self._state
 
     # ------------------------------------------------------------ driving
     def step(self):
         """Advance one chunk (Delta activity steps + connectivity update)."""
-        self._state = self.chunk_fn(self.state)
+        with telemetry.span("sim.step"):
+            self._state = self.chunk_fn(self.state)
         return self._state
 
     def run(self, num_chunks: int, recorder: Optional[object] = None):
@@ -107,13 +121,26 @@ class Simulator:
         per-region observables is recorded after every chunk (on the
         global arrays, inside the same scan) and the advanced recorder is
         returned: ``state, rec = sim.run(k, recorder=rec)``. Without it,
-        returns the final state."""
+        returns the final state.
+
+        Runs under a ``telemetry.span``; with ``profile_dir`` set, the
+        whole call (fenced by ``block_until_ready``) is captured as one
+        profiler trace under ``<profile_dir>/``."""
+        state = self.state   # init outside the run span/capture
         fn = self._run_fn(int(num_chunks), recorder is not None)
-        if recorder is None:
-            self._state = fn(self.state)
-            return self._state
-        self._state, recorder = fn(self.state, recorder)
-        return self._state, recorder
+        with telemetry.span("sim.run", chunks=int(num_chunks)), \
+                telemetry.profile(self.profile_dir):
+            if recorder is None:
+                self._state = fn(state)
+                out = self._state
+            else:
+                self._state, recorder = fn(state, recorder)
+                out = (self._state, recorder)
+            if self.profile_dir:
+                # fence so the capture contains the device work, not just
+                # the async dispatch
+                jax.block_until_ready(self._state)
+        return out
 
     def _run_fn(self, k: int, with_recorder: bool):
         key = (k, with_recorder)
@@ -158,16 +185,30 @@ class Simulator:
         return fn
 
     # ------------------------------------------------------------ readout
-    def stats(self) -> dict:
-        """The paper's byte-accounting counters, summed over ranks, as
-        plain floats."""
-        return {k: float(v.sum()) for k, v in self.state.stats.items()}
+    def stats(self, reduce: bool = True) -> dict:
+        """The device counters (paper byte accounting + per-phase work),
+        fetched in ONE ``jax.device_get`` of the whole counter subtree
+        (not one transfer per key). ``reduce=True`` (default) sums over
+        ranks to plain floats; ``reduce=False`` keeps the (R,) per-rank
+        resolution as host arrays."""
+        counters = jax.device_get(self.state.stats.counters)
+        if reduce:
+            return {k: float(v.sum()) for k, v in counters.items()}
+        return dict(counters)
+
+    def metrics(self) -> "telemetry.Metrics":
+        """The full device metrics tree — counters, per-chunk rings, and
+        histograms — fetched in one transfer; leaves are host arrays with
+        the per-rank leading axis intact."""
+        with telemetry.span("sim.metrics"):
+            return jax.device_get(self.state.stats)
 
     def lower(self):
         """Lower one sim chunk at the global sharded shapes — scenario
         included, so the dry-run/roofline path sees the trace that will
         actually run (stimulus tables, population params, lesion masks)."""
-        return self.chunk_fn.lower(jax.eval_shape(self.init_fn))
+        with telemetry.span("sim.lower"):
+            return self.chunk_fn.lower(jax.eval_shape(self.init_fn))
 
     # ------------------------------------------------------------ persist
     def save(self, path: str) -> int:
@@ -175,10 +216,11 @@ class Simulator:
         ``checkpoint.manager``. Returns the saved chunk number."""
         st = self.state
         step = int(jax.device_get(st.chunk))
-        manager.save(path, step, st,
-                     metadata={"cfg": self.cfg.name,
-                               "rate_exchange": self.cfg.rate_exchange,
-                               "num_ranks": self.num_ranks})
+        with telemetry.span("sim.save", step=step):
+            manager.save(path, step, st,
+                         metadata={"cfg": self.cfg.name,
+                                   "rate_exchange": self.cfg.rate_exchange,
+                                   "num_ranks": self.num_ranks})
         return step
 
     def restore(self, path: str, step: Optional[int] = None) -> int:
@@ -191,10 +233,11 @@ class Simulator:
             step = manager.latest_step(path)
             if step is None:
                 raise FileNotFoundError(f"no checkpoint under {path!r}")
-        target = jax.eval_shape(self.init_fn)
-        shardings = jax.tree.map(
-            lambda spec: NamedSharding(self.mesh, spec), self.specs,
-            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
-        tree, _ = manager.restore(path, step, target, shardings)
-        self._state = tree
+        with telemetry.span("sim.restore", step=step):
+            target = jax.eval_shape(self.init_fn)
+            shardings = jax.tree.map(
+                lambda spec: NamedSharding(self.mesh, spec), self.specs,
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+            tree, _ = manager.restore(path, step, target, shardings)
+            self._state = tree
         return step

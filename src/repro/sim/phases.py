@@ -31,6 +31,7 @@ from repro.scenarios import populations as pops
 from repro.scenarios import protocol as proto
 from repro.scenarios import regions as regions_mod
 from repro.sim import registry
+from repro.telemetry import metrics as telemetry_metrics
 
 
 @dataclass
@@ -40,7 +41,10 @@ class PhaseContext:
     ``rank`` is the traced ``lax.axis_index`` inside shard_map (or a
     concrete int in single-rank helpers); ``table`` is the per-neuron
     population parameter table; ``regions``/``events`` are the scenario's
-    static tuples (empty when scenario is None)."""
+    static tuples (empty when scenario is None); ``metrics`` is the shared
+    ``telemetry.metrics.Recorder`` every registered phase implementation
+    records through (one jnp expression per quantity — the bit-identity
+    surface of DESIGN.md §9)."""
     cfg: Any
     rank: Any
     axis_name: Optional[str]
@@ -49,6 +53,7 @@ class PhaseContext:
     table: Any = None
     regions: Tuple = ()
     events: Tuple = ()
+    metrics: Any = None
 
 
 def make_context(cfg, rank, axis_name, num_ranks: int,
@@ -58,7 +63,9 @@ def make_context(cfg, rank, axis_name, num_ranks: int,
     events = scenario.events if scenario is not None else ()
     return PhaseContext(cfg=cfg, rank=rank, axis_name=axis_name,
                         num_ranks=num_ranks, scenario=scenario, table=table,
-                        regions=regions, events=events)
+                        regions=regions, events=events,
+                        metrics=telemetry_metrics.Recorder(
+                            n=cfg.neurons_per_rank))
 
 
 # ================================================================ activity
@@ -105,8 +112,7 @@ def spikes_old(st7, state, ctx: PhaseContext, stats):
     hits = spikes.lookup_spikes(all_ids, state.in_edges, n)
     remote_in = hits & ((state.in_edges // n) != ctx.rank) \
         & (state.in_edges >= 0)
-    stats = dict(stats, spikes_sent=stats["spikes_sent"]
-                 + jnp.sum(st7[5]).astype(jnp.float32))
+    stats = stats.count("spikes_sent", jnp.sum(st7[5]))
     return remote_in, stats
 
 
@@ -136,11 +142,14 @@ def activity_reference(state, ctx: PhaseContext):
                        cfg.seed, state.chunk * cfg.rate_period + t, ctx.rank,
                        n, stim=stim, lesions=lesions,
                        remote_override=remote_in, rate_slots=rate_slots)
-        return (st, stats), None
+        # this step's fired count — the same per-step reduction the fused
+        # megakernel writes to its spike-count output block
+        return (st, stats), jnp.sum(st[5].astype(jnp.float32))
 
-    (out, stats), _ = jax.lax.scan(
+    (out, stats), spikes_per_step = jax.lax.scan(
         step, (_st7(state.neurons), state.stats),
         jnp.arange(cfg.rate_period, dtype=jnp.int32))
+    stats = ctx.metrics.activity_window(stats, spikes_per_step)
     return state._replace(neurons=_unpack_st7(state.neurons, out),
                           stats=stats)
 
@@ -154,12 +163,14 @@ def activity_fused(state, ctx: PhaseContext):
     cfg = ctx.cfg
     izh, ca_consts, bg_mean, bg_std, stim, lesions, rates, rate_slots = \
         _window_inputs(state, ctx)
-    out = kops.fused_activity_window(
+    out, spikes_per_step = kops.fused_activity_window(
         _st7(state.neurons), state.in_edges, ctx.table.synapse_weight, rates,
         bg_mean, bg_std, state.chunk, ctx.rank, seed=cfg.seed,
         num_steps=cfg.rate_period, izh=izh, ca_consts=ca_consts,
         stim=stim, lesions=lesions, rate_slots=rate_slots)
-    return state._replace(neurons=_unpack_st7(state.neurons, out))
+    stats = ctx.metrics.activity_window(state.stats, spikes_per_step)
+    return state._replace(neurons=_unpack_st7(state.neurons, out),
+                          stats=stats)
 
 
 # ================================================================ dispatch
@@ -183,6 +194,15 @@ def connectivity_phase(state, ctx: PhaseContext):
 
 def sim_chunk(state, ctx: PhaseContext):
     """One chunk = one rate window (Delta activity steps) + one
-    connectivity update."""
-    state = activity_phase(state, ctx)
-    return connectivity_phase(state, ctx)
+    connectivity update. Each phase runs under a ``jax.named_scope`` so it
+    shows up as a named region in profiler traces / HLO metadata, and the
+    chunk's counter increments are written into the per-chunk metrics ring
+    (per-Delta resolution; telemetry.metrics)."""
+    start = state.stats.counters
+    with jax.named_scope("repro.activity"):
+        state = activity_phase(state, ctx)
+    with jax.named_scope("repro.connectivity"):
+        state = connectivity_phase(state, ctx)
+    # connectivity_update advanced state.chunk: slot = the chunk just run
+    return state._replace(stats=state.stats.record_chunk(
+        start, state.chunk - 1))

@@ -1,0 +1,24 @@
+"""repro.telemetry — device-side metrics, host-side spans, unified report
+(DESIGN.md §9).
+
+Three layers:
+
+  metrics   the ``Metrics`` pytree carried through the jitted scan in
+            ``BrainState.stats`` — per-phase counters, per-chunk ring
+            buffers, fixed-size histograms; per-rank resolution preserved;
+  trace     ``span(name)`` wall-clock records + jax.profiler trace
+            annotations; ``profile(log_dir)`` guards a Perfetto capture;
+  report    the single JSON schema all benchmarks emit and
+            ``benchmarks/check_regression.py`` gates on.
+"""
+from repro.telemetry.metrics import (COUNTER_KEYS, HIST_BUCKETS, LEGACY_KEYS,
+                                     PHASE_OF, Metrics, Recorder,
+                                     init_metrics, metrics_specs)
+from repro.telemetry.trace import (Span, clear, export, profile, span, spans)
+from repro.telemetry import report
+
+__all__ = [
+    "COUNTER_KEYS", "HIST_BUCKETS", "LEGACY_KEYS", "PHASE_OF", "Metrics",
+    "Recorder", "init_metrics", "metrics_specs", "Span", "clear", "export",
+    "profile", "span", "spans", "report",
+]

@@ -1,0 +1,214 @@
+"""Device-side metrics: the structured ``Metrics`` pytree carried through
+the jitted scan (DESIGN.md §9).
+
+``Metrics`` replaces the engine's old flat ``stats`` dict of summed scalars
+with three groups of small per-rank device buffers:
+
+  counters   {name: (1,) f32}      monotone per-rank totals — the paper's
+                                   byte-accounting counters plus per-phase
+                                   work counters (see ``PHASE_OF``);
+  per_chunk  {name: (1, H) f32}    a ring buffer of per-chunk (per-Delta)
+                                   counter increments, indexed by
+                                   ``chunk % H`` — per-Delta resolution is
+                                   preserved on device instead of being
+                                   lost to a running sum;
+  hists      {name: (1, B) f32}    fixed-size histograms (spikes-per-step
+                                   fraction, subscription occupancy,
+                                   traversal restart depth).
+
+Every leaf keeps its leading per-rank axis of size 1 so the whole tree
+shards over the 'ranks' mesh axis like the old counters did
+(``metrics_specs``); nothing is ``.sum()``-ed before the host asks for a
+reduction (``Simulator.stats`` / ``Simulator.metrics``).
+
+Bit-identity contract: all recording happens in plain jnp *outside* the
+variant lowerings, on values both lowerings produce identically (the
+per-step fired counts, the shared tree, the shared traversal depths), so
+``activity_impl``/``connectivity_impl``/``rate_exchange`` variants commit
+bit-identical physics counters (tests/test_telemetry.py). Bucket weights
+are 0/1 and counts are small integers, so the f32 scatter-adds are exact
+and order-independent.
+
+This module is import-light (jax only) — the engine, kernels, and
+connectome all import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# the 11 legacy byte-accounting counters (paper Tables I/II) ...
+LEGACY_KEYS = ("spikes_sent", "rates_sent", "subscription_requests",
+               "subscription_overflow", "bh_requests", "bh_responses",
+               "formation_requests", "synapses_formed", "synapses_deleted",
+               "tree_nodes_downloaded", "request_overflow")
+# ... plus the per-phase work counters added with the telemetry layer
+EXTRA_KEYS = ("activity_steps", "activity_spikes", "tree_nodes_built",
+              "bh_restarts")
+COUNTER_KEYS = LEGACY_KEYS + EXTRA_KEYS
+
+# counter -> phase of the three-phase loop it instruments; the report
+# groups counters by these (telemetry/report.py)
+PHASE_OF = {
+    "activity_steps": "activity", "activity_spikes": "activity",
+    "spikes_sent": "activity",
+    "tree_nodes_built": "tree_build", "tree_nodes_downloaded": "tree_build",
+    "bh_requests": "phase_b", "bh_responses": "phase_b",
+    "bh_restarts": "phase_b", "formation_requests": "phase_b",
+    "request_overflow": "phase_b",
+    "synapses_formed": "synapse_update", "synapses_deleted": "synapse_update",
+    "rates_sent": "exchange", "subscription_requests": "exchange",
+    "subscription_overflow": "exchange",
+}
+
+# histogram -> bucket count. All fixed at trace time.
+HIST_BUCKETS = {
+    "spikes_per_step": 16,   # fraction of neurons firing per step, [0, 1)
+    "subs_occupancy": 16,    # filled fraction of the subscription registry
+    "frontier_depth": 8,     # Barnes-Hut restarts per phase-B query
+}
+
+DEFAULT_HISTORY = 64         # per-chunk ring length (BrainConfig.metrics_history)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metrics:
+    """The device-side metrics tree (see module docstring). Immutable:
+    every recording method returns a new ``Metrics``. ``m["key"]`` and
+    ``m.items()`` delegate to ``counters`` so the old ``stats['key']``
+    read idiom keeps working."""
+    counters: Dict[str, Any]
+    per_chunk: Dict[str, Any]
+    hists: Dict[str, Any]
+
+    # -------------------------------------------------- dict-compat reads
+    def __getitem__(self, key):
+        return self.counters[key]
+
+    def __contains__(self, key):
+        return key in self.counters
+
+    def keys(self):
+        return self.counters.keys()
+
+    def items(self):
+        return self.counters.items()
+
+    # -------------------------------------------------- recording
+    def count(self, name: str, delta) -> "Metrics":
+        """Add ``delta`` (scalar, any numeric dtype) to counter ``name``."""
+        c = dict(self.counters)
+        c[name] = c[name] + jnp.asarray(delta, jnp.float32)
+        return dataclasses.replace(self, counters=c)
+
+    def observe(self, name: str, bucket, weight=None) -> "Metrics":
+        """Scatter-add ``weight`` (default 1.0 each) into histogram
+        ``name`` at ``bucket`` (any-shape i32, pre-clipped by the
+        caller)."""
+        h = dict(self.hists)
+        b = jnp.ravel(bucket)
+        w = jnp.ones(b.shape, jnp.float32) if weight is None \
+            else jnp.ravel(weight).astype(jnp.float32)
+        h[name] = h[name].at[0, b].add(w)
+        return dataclasses.replace(self, hists=h)
+
+    def record_chunk(self, start_counters: Dict[str, Any],
+                     chunk) -> "Metrics":
+        """Write this chunk's counter increments (current - ``start``)
+        into ring slot ``chunk % H``. Called once per ``sim_chunk`` with
+        the counters snapshotted at chunk entry."""
+        pc = dict(self.per_chunk)
+        for k, ring in pc.items():
+            slot = jnp.asarray(chunk, jnp.int32) % ring.shape[1]
+            delta = self.counters[k][0] - start_counters[k][0]
+            pc[k] = ring.at[0, slot].set(delta)
+        return dataclasses.replace(self, per_chunk=pc)
+
+
+def _flatten_with_keys(m: Metrics):
+    K = jax.tree_util.DictKey
+    return (((K("counters"), m.counters), (K("per_chunk"), m.per_chunk),
+             (K("hists"), m.hists)), None)
+
+
+jax.tree_util.register_pytree_with_keys(
+    Metrics, _flatten_with_keys, lambda aux, ch: Metrics(*ch))
+
+
+def init_metrics(history: int = DEFAULT_HISTORY) -> Metrics:
+    """Fresh zeroed per-rank metrics ((1, ...) leaves, sharded P('ranks')
+    in the engine's state specs)."""
+    return Metrics(
+        counters={k: jnp.zeros((1,), jnp.float32) for k in COUNTER_KEYS},
+        per_chunk={k: jnp.zeros((1, history), jnp.float32)
+                   for k in COUNTER_KEYS},
+        hists={k: jnp.zeros((1, b), jnp.float32)
+               for k, b in HIST_BUCKETS.items()})
+
+
+def metrics_specs(m: Metrics) -> Metrics:
+    """PartitionSpecs matching ``init_metrics`` leaf-for-leaf: everything
+    is per-rank on its leading axis."""
+    return Metrics(
+        counters={k: P("ranks") for k in m.counters},
+        per_chunk={k: P("ranks", None) for k in m.per_chunk},
+        hists={k: P("ranks", None) for k in m.hists})
+
+
+# ==================================================================
+# Recorder: the PhaseContext ``metrics`` handle. One object shared by
+# every @register_phase implementation; it centralizes the recording
+# *math* so each quantity is computed by exactly one jnp expression no
+# matter which variant lowering produced its inputs (the bit-identity
+# surface of DESIGN.md §9).
+# ==================================================================
+@dataclasses.dataclass(frozen=True)
+class Recorder:
+    """Static recording config for one rank's trace. ``n`` is
+    neurons-per-rank (the spikes-per-step normalizer)."""
+    n: int
+
+    def activity_window(self, m: Metrics, spikes_per_step) -> Metrics:
+        """Record one rate window from its (T,) per-step fired counts —
+        produced identically by the reference scan (stacked ys) and the
+        fused megakernel (the per-step output block)."""
+        t = spikes_per_step.shape[0]
+        m = m.count("activity_steps", jnp.float32(t))
+        m = m.count("activity_spikes", jnp.sum(spikes_per_step))
+        nb = HIST_BUCKETS["spikes_per_step"]
+        frac = spikes_per_step / jnp.float32(self.n)
+        bucket = jnp.clip((frac * nb).astype(jnp.int32), 0, nb - 1)
+        return m.observe("spikes_per_step", bucket)
+
+    def tree_built(self, m: Metrics, local_tree) -> Metrics:
+        """Count the non-empty octree nodes of this chunk's local tree
+        (all levels) — the 'new' algorithm's answer to the old
+        algorithm's ``tree_nodes_downloaded``."""
+        built = sum(jnp.sum((c > 0).astype(jnp.float32))
+                    for c in local_tree.counts)
+        return m.count("tree_nodes_built", built)
+
+    def traversal(self, m: Metrics, depth, mask) -> Metrics:
+        """Record phase-B restart depths for the queries in ``mask``:
+        the ``bh_restarts`` total and the frontier-depth histogram. The
+        depths come out of ``bh_search`` identically under both
+        traversal lowerings."""
+        w = mask.astype(jnp.float32)
+        m = m.count("bh_restarts", jnp.sum(depth.astype(jnp.float32) * w))
+        nb = HIST_BUCKETS["frontier_depth"]
+        bucket = jnp.clip(depth, 0, nb - 1)
+        return m.observe("frontier_depth", bucket, w)
+
+    def subs_occupancy(self, m: Metrics, subs, no_sub) -> Metrics:
+        """One histogram entry per chunk: the filled fraction of the
+        sparse exchange's subscription registry (zeros stay zero under
+        the dense layout)."""
+        cap = subs.shape[0]
+        frac = jnp.sum((subs != no_sub).astype(jnp.float32)) / cap
+        nb = HIST_BUCKETS["subs_occupancy"]
+        bucket = jnp.clip((frac * nb).astype(jnp.int32), 0, nb - 1)
+        return m.observe("subs_occupancy", bucket[None])

@@ -100,15 +100,19 @@ def test_fused_bit_identical_to_oracle(hetero, protocol):
               ca_consts=(cfg.calcium_decay, cfg.calcium_beta),
               stim=stim, lesions=lesions)
     chunk, rank = jnp.int32(2), jnp.int32(1)
-    got = jax.jit(lambda st: activity_window(
+    got, got_spk = jax.jit(lambda st: activity_window(
         st, edges, w, rates, 5.0, 1.0, chunk, rank, interpret=True,
         **kw))(state)
-    want = jax.jit(lambda st: ref.activity_window_ref(
+    want, want_spk = jax.jit(lambda st: ref.activity_window_ref(
         st, edges, w, rates, 5.0, 1.0, chunk, rank, **kw))(state)
     for name, a, b in zip(("v", "u", "ca", "ax", "de", "spiked", "count"),
                           got, want):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=name)
+    # the telemetry per-step spike counts match too — same reduction
+    np.testing.assert_array_equal(np.asarray(got_spk), np.asarray(want_spk),
+                                  err_msg="spikes_per_step")
+    assert got_spk.shape == (T,)
     assert float(got[6].sum()) > 0, "window produced no spikes at all"
     if lesions is not None:
         # lesion window [12, 25) closed before T=40: elements regrow after
@@ -124,7 +128,7 @@ def test_fused_window_equals_per_step_calls():
     state, edges, w, rates = _rand_inputs(n, s_max, R, key=9)
     kw = dict(izh=_izh(cfg, n, False),
               ca_consts=(cfg.calcium_decay, cfg.calcium_beta))
-    win = jax.jit(lambda st: activity_window(
+    win, win_spk = jax.jit(lambda st: activity_window(
         st, edges, w, rates, 5.0, 1.0, jnp.int32(0), jnp.int32(0),
         seed=0, num_steps=T, interpret=True, **kw))(state)
     # per-step launches: chunk=0 is baked into gstep = 0*1 + t ... so use
@@ -133,10 +137,13 @@ def test_fused_window_equals_per_step_calls():
         st, edges, w, rates, 5.0, 1.0, t, jnp.int32(0),
         seed=0, num_steps=1, interpret=True, **kw))
     st = state
+    spk = []
     for t in range(T):
-        st = step1(st, jnp.int32(t))
+        st, spk_t = step1(st, jnp.int32(t))
+        spk.append(np.asarray(spk_t)[0])
     for a, b in zip(win, st):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(win_spk), np.asarray(spk))
 
 
 # ---------------------------------------------------------------- engine

@@ -93,12 +93,14 @@ def test_bh_search_prefers_nearby_mass():
     stacked = bh.stack_levels(tree.counts, tree.centroids, 0)
     q = 64
     x = jnp.tile(jnp.array([[0.1, 0.1, 0.1]]), (q, 1))
-    cell, valid, overflow = bh.bh_search(
+    cell, valid, overflow, depth = bh.bh_search(
         stacked, x, jnp.arange(q, dtype=jnp.int32),
         jnp.zeros((q,), jnp.int32), seed=4, chunk=jnp.int32(0),
         theta=cfg.theta, sigma=cfg.sigma, frontier=cfg.frontier_cap,
         n_levels=cfg.local_levels + 1)
     assert bool(jnp.all(valid))
+    # every settled query ran at least one expand/sample round
+    assert bool(jnp.all(depth >= 1))
     centers = morton.morton_cell_center(cell, cfg.local_levels)
     d = jnp.linalg.norm(centers - x, axis=-1)
     assert float((d < 0.4).mean()) > 0.8, float((d < 0.4).mean())
@@ -110,7 +112,7 @@ def test_bh_theta_zero_like_behavior_is_exact_leafs():
     pos = jax.random.uniform(jax.random.key(5), (32, 3), maxval=0.999)
     tree = octree.build_local_tree(pos, jnp.ones(32), 0, cfg, num_ranks=1)
     stacked = bh.stack_levels(tree.counts, tree.centroids, 0)
-    cell, valid, _ = bh.bh_search(
+    cell, valid, _, _ = bh.bh_search(
         stacked, pos, jnp.arange(32, dtype=jnp.int32),
         jnp.zeros((32,), jnp.int32), seed=6, chunk=jnp.int32(0), theta=0.05,
         sigma=cfg.sigma, frontier=64, n_levels=cfg.local_levels + 1)
