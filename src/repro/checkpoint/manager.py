@@ -1,14 +1,20 @@
-"""Checkpointing: atomic, keep-k, async, and elastic (restore reshards onto a
-different mesh / device count — the recovery path for node failures).
+"""Checkpointing: atomic, keep-k, async, verified, and elastic (restore
+reshards onto a different mesh / device count — the recovery path for node
+failures).
 
 Layout:  <dir>/step_<n>/
-           manifest.json    tree structure, shapes, dtypes, step, metadata
+           manifest.json    tree structure, shapes, dtypes, crc32s, step,
+                            metadata
            <leaf-id>.npy    one file per leaf (full logical array)
 
 Writes go to ``step_<n>.tmp`` and are atomically renamed — a crash mid-write
-never corrupts the latest checkpoint. ``AsyncCheckpointer`` overlaps the
-host-side write with the next training step (device->host copy is synchronous,
-disk I/O is not).
+never corrupts the latest checkpoint. Every leaf's crc32 is recorded in the
+manifest and verified on ``restore``; any mismatch (or a missing/truncated
+file, or an unreadable manifest) raises the typed ``CorruptCheckpointError``
+so a runner can skip to the previous step instead of loading garbage.
+``AsyncCheckpointer`` overlaps the host-side write with the next training
+step (device->host copy is synchronous, disk I/O is not) and its
+``restore_latest`` walks steps newest-first past corrupt ones.
 """
 from __future__ import annotations
 
@@ -17,11 +23,18 @@ import os
 import re
 import shutil
 import threading
-import time
-from typing import Any, Optional
+import zlib
+from typing import Any, List, Optional
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(RuntimeError):
+    """A checkpoint failed verification: checksum mismatch, missing or
+    truncated leaf file, or unreadable manifest. Distinct from structure
+    mismatches (KeyError/ValueError), which mean the checkpoint is valid
+    but does not fit the requested target tree."""
 
 
 def _flatten(tree):
@@ -32,6 +45,10 @@ def _flatten(tree):
                        for k in path)
         out.append((key, leaf))
     return out, treedef
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
 
 
 def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None):
@@ -46,7 +63,8 @@ def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None):
         fn = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fn), arr)
         manifest["leaves"][key] = {"file": fn, "shape": list(arr.shape),
-                                   "dtype": str(arr.dtype)}
+                                   "dtype": str(arr.dtype),
+                                   "crc32": _crc(arr)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -55,21 +73,71 @@ def save(ckpt_dir: str, step: int, tree, metadata: Optional[dict] = None):
     return final
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def steps_available(ckpt_dir: str) -> List[int]:
+    """All finalized checkpoint steps under ``ckpt_dir``, ascending."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)", d)))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = steps_available(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """Load and minimally validate a step's manifest.
+    Raises CorruptCheckpointError if missing or unparseable."""
+    path = os.path.join(ckpt_dir, f"step_{step}", "manifest.json")
+    try:
+        with open(path) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"unreadable manifest for step {step}: {e}") from e
+    if "leaves" not in manifest:
+        raise CorruptCheckpointError(
+            f"manifest for step {step} has no leaves table")
+    return manifest
+
+
+def load_arrays(ckpt_dir: str, step: int):
+    """Load every leaf of a checkpoint as raw host arrays, verifying
+    checksums: ``({key: np.ndarray}, manifest)``. The elastic restore
+    path uses this to re-derive rank-local sharding from the logically
+    global arrays without needing a matching target tree."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    manifest = read_manifest(ckpt_dir, step)
+    arrays = {}
+    for key, info in manifest["leaves"].items():
+        arrays[key] = _load_leaf(path, key, info, step)
+    return arrays, manifest
+
+
+def _load_leaf(path: str, key: str, info: dict, step: int) -> np.ndarray:
+    try:
+        arr = np.load(os.path.join(path, info["file"]))
+    except (OSError, ValueError) as e:
+        raise CorruptCheckpointError(
+            f"step {step} leaf {key!r}: unreadable ({e})") from e
+    crc = info.get("crc32")
+    if crc is not None and _crc(arr) != crc:
+        raise CorruptCheckpointError(
+            f"step {step} leaf {key!r}: crc32 mismatch")
+    if arr.dtype.kind == "V":  # np.load returns void for ml_dtypes (bf16)
+        import ml_dtypes
+        arr = arr.view(np.dtype(getattr(ml_dtypes, info["dtype"])))
+    return arr
 
 
 def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
     """Restore into the structure of ``target_tree``; ``shardings`` (same
     structure) reshards onto the CURRENT mesh — elastic restarts load a
-    checkpoint written on 256 devices onto 128 or 512 without conversion."""
+    checkpoint written on 256 devices onto 128 or 512 without conversion.
+    Verifies every leaf's crc32 (CorruptCheckpointError on mismatch)."""
     path = os.path.join(ckpt_dir, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(ckpt_dir, step)
     leaves, treedef = _flatten(target_tree)
     shard_leaves = None
     if shardings is not None:
@@ -79,10 +147,7 @@ def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
         info = manifest["leaves"].get(key)
         if info is None:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = np.load(os.path.join(path, info["file"]))
-        if arr.dtype.kind == "V":  # np.load returns void for ml_dtypes (bf16)
-            import ml_dtypes
-            arr = arr.view(np.dtype(getattr(ml_dtypes, info["dtype"])))
+        arr = _load_leaf(path, key, info, step)
         if list(arr.shape) != list(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
         if shard_leaves is not None:
@@ -93,10 +158,7 @@ def restore(ckpt_dir: str, step: int, target_tree, shardings=None):
 
 
 def gc_old(ckpt_dir: str, keep: int):
-    if not os.path.isdir(ckpt_dir):
-        return
-    steps = sorted(int(m.group(1)) for d in os.listdir(ckpt_dir)
-                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    steps = steps_available(ckpt_dir)
     for s in steps[:-keep] if keep > 0 else []:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
 
@@ -127,9 +189,14 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def restore_latest(self, target_tree, shardings=None):
+        """Restore the newest checkpoint that passes verification,
+        walking past corrupt steps (newest-first)."""
         self.wait()
-        step = latest_step(self.dir)
-        if step is None:
-            return None, None, None
-        tree, manifest = restore(self.dir, step, target_tree, shardings)
-        return step, tree, manifest
+        for step in reversed(steps_available(self.dir)):
+            try:
+                tree, manifest = restore(self.dir, step, target_tree,
+                                         shardings)
+            except CorruptCheckpointError:
+                continue
+            return step, tree, manifest
+        return None, None, None

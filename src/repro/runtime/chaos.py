@@ -1,0 +1,114 @@
+"""Chaos harness: deterministic fault injection for the fault-tolerant
+runtime (DESIGN.md §10; driven by tests/test_runtime.py and
+benchmarks/bench_runner.py).
+
+Hooks attach to ``SimulationRunner.chaos_hooks`` and fire after every
+completed segment, before the runner's health poll / checkpoint — the
+same window a real fault would occupy. Each injector fires a bounded
+number of times from a deterministic trigger (a chunk threshold), so
+recovery tests are exactly reproducible:
+
+  * ``poison_nan_once``     flip one element of a state field to NaN
+                            (device-state corruption -> rollback);
+  * ``preempt_after``       raise the runner's preemption flag
+                            (SIGTERM drain -> final checkpoint + exit);
+  * ``corrupt_checkpoint``  truncate / bit-flip / unlink pieces of an
+                            on-disk checkpoint (the crc32 + typed-error
+                            path: restores must skip to an older step);
+  * overflow pressure has no injector — build the config with a shrunken
+    ``subs_cap_factor``/``requests_cap_factor`` (e.g. ``overflow_config``)
+    and the exchange itself generates the persistent overflow that drives
+    the degradation ladder.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def poison_nan_once(field: str = "v", index: int = 0,
+                    after_chunk: int = 0):
+    """Hook: once the state reaches ``after_chunk``, overwrite one
+    element of ``state.neurons.<field>`` (or ``positions``) with NaN —
+    exactly once. The runner's pre-checkpoint probe (or the next scan's
+    in-chunk verdict) must flag HEALTH_NONFINITE and roll back."""
+    fired = {"done": False}
+
+    def hook(runner):
+        if fired["done"]:
+            return
+        st = runner.sim.state
+        if int(jax.device_get(st.chunk)) < after_chunk:
+            return
+        fired["done"] = True
+        if field == "positions":
+            leaf, put = st.positions, \
+                lambda a: st._replace(positions=a)
+        else:
+            leaf = getattr(st.neurons, field)
+            put = lambda a: st._replace(
+                neurons=st.neurons._replace(**{field: a}))
+        arr = np.array(jax.device_get(leaf))   # writable copy
+        arr.reshape(-1)[index] = np.nan
+        runner.sim._state = put(jax.device_put(arr, leaf.sharding))
+
+    return hook
+
+
+def preempt_after(chunk: int):
+    """Hook: raise the preemption flag once the state reaches ``chunk``
+    — the runner drains (final checkpoint) and returns "preempted"."""
+    def hook(runner):
+        if int(jax.device_get(runner.sim.state.chunk)) >= chunk:
+            runner.preempt()
+
+    return hook
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: Optional[int] = None,
+                       mode: str = "flip"):
+    """Damage the on-disk checkpoint at ``step`` (default: newest).
+    ``mode``: 'flip' xors a byte in the middle of the first leaf file,
+    'truncate' halves it, 'manifest' truncates manifest.json. Every mode
+    must surface as ``CorruptCheckpointError`` on restore."""
+    from repro.checkpoint import manager
+    if step is None:
+        step = manager.latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    if mode == "manifest":
+        mpath = os.path.join(path, "manifest.json")
+        with open(mpath, "r+b") as f:
+            f.truncate(max(os.path.getsize(mpath) // 2, 1))
+        return step
+    leaf = sorted(f for f in os.listdir(path) if f.endswith(".npy"))[0]
+    lpath = os.path.join(path, leaf)
+    if mode == "truncate":
+        with open(lpath, "r+b") as f:
+            f.truncate(max(os.path.getsize(lpath) // 2, 1))
+    elif mode == "flip":
+        with open(lpath, "r+b") as f:
+            f.seek(os.path.getsize(lpath) // 2 + 64)
+            b = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([b[0] ^ 0xFF]))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return step
+
+
+def overflow_config(cfg, subs_cap_factor: float = 0.0001,
+                    requests_cap_factor: Optional[float] = None):
+    """A copy of ``cfg`` with the sparse-exchange subscription cap (and
+    optionally the request routing cap) shrunk to the floor, so the
+    registry overflows every chunk — the pressure source for the
+    runner's degradation ladder."""
+    kw = {"subs_cap_factor": subs_cap_factor}
+    if requests_cap_factor is not None:
+        kw["requests_cap_factor"] = requests_cap_factor
+    return dataclasses.replace(cfg, **kw)

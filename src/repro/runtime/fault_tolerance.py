@@ -29,6 +29,17 @@ import numpy as np
 from repro.checkpoint.manager import AsyncCheckpointer
 
 
+def write_heartbeat(path: str, payload: dict):
+    """Atomically publish a heartbeat JSON (``payload`` + a ``t``
+    timestamp): write a sibling temp file, then ``os.replace`` — readers
+    see either the previous heartbeat or the new one, never a torn
+    write. Shared by TrainingRunner and runtime.sim_runner."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(dict(payload, t=time.time()), f)
+    os.replace(tmp, path)
+
+
 @dataclasses.dataclass
 class RunnerConfig:
     ckpt_dir: str
@@ -73,9 +84,10 @@ class TrainingRunner:
                        metadata={"next_step": self.step})
 
     def _heartbeat(self):
+        # temp + os.replace: a watchdog polling the file must never see a
+        # half-written JSON (plain open(path, "w") is not atomic)
         if self.cfg.heartbeat_path:
-            with open(self.cfg.heartbeat_path, "w") as f:
-                json.dump({"step": self.step, "t": time.time()}, f)
+            write_heartbeat(self.cfg.heartbeat_path, {"step": self.step})
 
     def preempt(self):
         """External preemption signal (SIGTERM handler calls this)."""

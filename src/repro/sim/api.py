@@ -21,15 +21,19 @@ from typing import Optional
 
 import jax
 from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro import telemetry
 from repro.checkpoint import manager
+from repro.connectome import routing
 from repro.core import engine
+from repro.core import spikes
 from repro.scenarios import observables
 from repro.scenarios import protocol as proto
 from repro.sim import phases as sim_phases
 from repro.sim import registry
+from repro.telemetry import metrics as telemetry_metrics
 
 
 class Simulator:
@@ -84,6 +88,12 @@ class Simulator:
             self.chunk_fn = jax.jit(self._chunk_shard, donate_argnums=(0,))
             self._run_cache = {}
             self._state = None
+            self._probe_fn = None
+            self._rebuild_fn = None
+            # host-side runner lifecycle counters (telemetry.metrics
+            # .LIFECYCLE_KEYS), merged into stats() and owned jointly
+            # with runtime.sim_runner.SimulationRunner
+            self.lifecycle = {k: 0 for k in telemetry_metrics.LIFECYCLE_KEYS}
 
     @classmethod
     def from_config(cls, cfg, scenario=None, mesh=None,
@@ -188,13 +198,88 @@ class Simulator:
     def stats(self, reduce: bool = True) -> dict:
         """The device counters (paper byte accounting + per-phase work),
         fetched in ONE ``jax.device_get`` of the whole counter subtree
-        (not one transfer per key). ``reduce=True`` (default) sums over
-        ranks to plain floats; ``reduce=False`` keeps the (R,) per-rank
-        resolution as host arrays."""
+        (not one transfer per key), plus the host-side runner lifecycle
+        counters (``checkpoint_saves``/``restores``/``rollbacks``/
+        ``restarts``/``degrade_events``). ``reduce=True`` (default) sums
+        over ranks to plain floats; ``reduce=False`` keeps the (R,)
+        per-rank resolution as host arrays (device counters only)."""
         counters = jax.device_get(self.state.stats.counters)
         if reduce:
-            return {k: float(v.sum()) for k, v in counters.items()}
+            out = {k: float(v.sum()) for k, v in counters.items()}
+            out.update({k: float(v) for k, v in self.lifecycle.items()})
+            return out
         return dict(counters)
+
+    def health(self) -> dict:
+        """The health gauges written by the LAST completed chunk (one
+        cheap transfer of four scalars per rank — the per-interval poll
+        of DESIGN.md §10). ``health_flags`` is the psum'd global bitmask
+        (reduced with max, identical on every rank); the census gauges
+        sum over ranks. Zero flags = healthy. Stale until a chunk has
+        run — use ``probe_health`` to evaluate the current state."""
+        g = jax.device_get(self.state.stats.gauges)
+        return {k: float(v.max() if k == "health_flags" else v.sum())
+                for k, v in g.items()}
+
+    def probe_health(self) -> int:
+        """Recompute the health verdict on the CURRENT state (same device
+        math as the in-scan gauge refresh — ``phases.health_verdict``) and
+        return the global ``health_flags`` bitmask. The runner calls this
+        on the exact state it is about to checkpoint, so every checkpoint
+        on disk is verified-good."""
+        if self._probe_fn is None:
+            cfg, num_ranks, scn = self.cfg, self.num_ranks, self.scenario
+
+            def body(st):
+                rank = jax.lax.axis_index("ranks")
+                ctx = sim_phases.make_context(cfg, rank, "ranks", num_ranks,
+                                              scn)
+                stats = sim_phases.health_verdict(st, ctx)
+                return stats.gauges["health_flags"]
+
+            self._probe_fn = jax.jit(compat.shard_map(
+                body, mesh=self.mesh, in_specs=(self.specs,),
+                out_specs=P("ranks"), check_vma=False))
+        flags = jax.device_get(self._probe_fn(self.state))
+        return int(flags.max())
+
+    def rebuild_exchange(self):
+        """Re-derive the sparse rate-exchange fields (subscription
+        registry, edge->slot remap, subscribed-rate buffer) from the
+        in-edge table and advertised rates — the exact computation
+        ``exchange_sparse`` runs at every chunk's end, so on a state
+        restored at a chunk boundary the rebuilt fields are bit-identical
+        to the checkpointed ones. The elastic resume path uses this to
+        rebuild the registry for a new rank count; no-op under the dense
+        layout (whose table restores/reshapes directly)."""
+        if self.cfg.rate_exchange != "sparse":
+            return self.state
+        if self._rebuild_fn is None:
+            cfg, num_ranks = self.cfg, self.num_ranks
+            n = cfg.neurons_per_rank
+
+            def body(st):
+                rank = jax.lax.axis_index("ranks")
+                subs, rate_slots, _ = spikes.build_subscriptions(
+                    st.in_edges, rank, n, routing.cap_subs(cfg, num_ranks))
+                remote_rates, _ = routing.push_subscribed_rates(
+                    subs, st.neurons.rate, "ranks", num_ranks, n)
+                return st._replace(subs=subs, rate_slots=rate_slots,
+                                   remote_rates=remote_rates)
+
+            self._rebuild_fn = jax.jit(compat.shard_map(
+                body, mesh=self.mesh, in_specs=(self.specs,),
+                out_specs=self.specs, check_vma=False))
+        with telemetry.span("sim.rebuild_exchange"):
+            self._state = self._rebuild_fn(self.state)
+        return self._state
+
+    def shardings(self):
+        """The state's NamedShardings on THIS simulator's mesh (same
+        structure as ``self.specs``)."""
+        return jax.tree.map(
+            lambda spec: NamedSharding(self.mesh, spec), self.specs,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
     def metrics(self) -> "telemetry.Metrics":
         """The full device metrics tree — counters, per-chunk rings, and
@@ -211,16 +296,26 @@ class Simulator:
             return self.chunk_fn.lower(jax.eval_shape(self.init_fn))
 
     # ------------------------------------------------------------ persist
+    def ckpt_metadata(self) -> dict:
+        """Checkpoint metadata: enough for a fresh process (possibly on a
+        different rank count or after a degrade) to decide how to restore
+        — see runtime.sim_runner.try_resume / runtime.elastic."""
+        return {"cfg": self.cfg.name,
+                "rate_exchange": self.cfg.rate_exchange,
+                "num_ranks": self.num_ranks,
+                "neurons_per_rank": self.cfg.neurons_per_rank,
+                "subs_cap_factor": self.cfg.subs_cap_factor,
+                "requests_cap_factor": self.cfg.requests_cap_factor,
+                "lifecycle": dict(self.lifecycle)}
+
     def save(self, path: str) -> int:
         """Atomic full-state checkpoint at ``<path>/step_<chunk>/`` via
         ``checkpoint.manager``. Returns the saved chunk number."""
         st = self.state
         step = int(jax.device_get(st.chunk))
         with telemetry.span("sim.save", step=step):
-            manager.save(path, step, st,
-                         metadata={"cfg": self.cfg.name,
-                                   "rate_exchange": self.cfg.rate_exchange,
-                                   "num_ranks": self.num_ranks})
+            manager.save(path, step, st, metadata=self.ckpt_metadata())
+        self.lifecycle["checkpoint_saves"] += 1
         return step
 
     def restore(self, path: str, step: Optional[int] = None) -> int:
@@ -235,9 +330,7 @@ class Simulator:
                 raise FileNotFoundError(f"no checkpoint under {path!r}")
         with telemetry.span("sim.restore", step=step):
             target = jax.eval_shape(self.init_fn)
-            shardings = jax.tree.map(
-                lambda spec: NamedSharding(self.mesh, spec), self.specs,
-                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
-            tree, _ = manager.restore(path, step, target, shardings)
+            tree, _ = manager.restore(path, step, target, self.shardings())
             self._state = tree
+        self.lifecycle["checkpoint_restores"] += 1
         return step

@@ -192,17 +192,80 @@ def connectivity_phase(state, ctx: PhaseContext):
     return connectivity_update(state, ctx)
 
 
+# ================================================================ health
+def health_verdict(state, ctx: PhaseContext):
+    """The device-side health verdict (DESIGN.md §10): a few reductions
+    over state that is already resident, folded into one psum — cheap
+    enough to run every chunk inside the jitted scan.
+
+    Checks (bits of ``health_flags``, identical math under every variant
+    lowering so it never perturbs old==new / dense==sparse bit-identity):
+
+      HEALTH_NONFINITE     NaN/Inf anywhere in the physical per-neuron
+                           state (v, u, calcium, rate) or positions;
+      HEALTH_ASYMMETRY     global live out-edge entries != live in-edge
+                           entries (every synapse is one entry in each
+                           table) — only asserted while
+                           ``request_overflow`` is 0, since dropped
+                           deletion notifications legitimately leave
+                           stale partner entries;
+      HEALTH_CONSERVATION  global live entries outside
+                           ``[2F - 2D, 2F - D]`` for F = synapses_formed,
+                           D = synapses_deleted: formation writes two
+                           entries per acceptance; retraction removes
+                           between one (double-retraction counts the kill
+                           twice) and two (local + notified partner)
+                           entries per counted kill. Same overflow guard.
+
+    ``health_flags`` is psum'd so every rank carries the same verdict —
+    readers must reduce it with max(), never sum(). The raw per-rank
+    census gauges stay rank-local for diagnosis.
+    """
+    neu = state.neurons
+    nonfinite = sum(
+        jnp.sum((~jnp.isfinite(x)).astype(jnp.float32))
+        for x in (neu.v, neu.u, neu.calcium, neu.rate, state.positions))
+    out_live = jnp.sum((state.out_edges >= 0).astype(jnp.float32))
+    in_live = jnp.sum((state.in_edges >= 0).astype(jnp.float32))
+    c = state.stats.counters
+    local = jnp.stack([nonfinite, out_live, in_live,
+                       c["synapses_formed"][0], c["synapses_deleted"][0],
+                       c["request_overflow"][0]])
+    g = jax.lax.psum(local, ctx.axis_name) \
+        if ctx.axis_name is not None else local
+    g_nf, g_out, g_in, formed, deleted, overflow = (g[i] for i in range(6))
+    clean = overflow == 0
+    flags = jnp.where(g_nf > 0,
+                      jnp.float32(telemetry_metrics.HEALTH_NONFINITE), 0.0)
+    flags = flags + jnp.where(
+        clean & (g_out != g_in),
+        jnp.float32(telemetry_metrics.HEALTH_ASYMMETRY), 0.0)
+    live = g_out + g_in
+    lo = 2.0 * formed - 2.0 * deleted
+    hi = 2.0 * formed - deleted
+    flags = flags + jnp.where(
+        clean & ((live < lo) | (live > hi)),
+        jnp.float32(telemetry_metrics.HEALTH_CONSERVATION), 0.0)
+    return state.stats.set_gauges({
+        "health_flags": flags, "nonfinite_state": nonfinite,
+        "out_edges_live": out_live, "in_edges_live": in_live})
+
+
 def sim_chunk(state, ctx: PhaseContext):
     """One chunk = one rate window (Delta activity steps) + one
     connectivity update. Each phase runs under a ``jax.named_scope`` so it
-    shows up as a named region in profiler traces / HLO metadata, and the
+    shows up as a named region in profiler traces / HLO metadata, the
     chunk's counter increments are written into the per-chunk metrics ring
-    (per-Delta resolution; telemetry.metrics)."""
+    (per-Delta resolution; telemetry.metrics), and the health gauges are
+    refreshed so the fault-tolerant runner can poll the verdict without
+    touching the full state (DESIGN.md §10)."""
     start = state.stats.counters
     with jax.named_scope("repro.activity"):
         state = activity_phase(state, ctx)
     with jax.named_scope("repro.connectivity"):
         state = connectivity_phase(state, ctx)
     # connectivity_update advanced state.chunk: slot = the chunk just run
-    return state._replace(stats=state.stats.record_chunk(
-        start, state.chunk - 1))
+    stats = state.stats.record_chunk(start, state.chunk - 1)
+    with jax.named_scope("repro.health"):
+        stats = health_verdict(state._replace(stats=stats), ctx)
+    return state._replace(stats=stats)

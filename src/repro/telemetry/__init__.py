@@ -11,14 +11,16 @@ Three layers:
   report    the single JSON schema all benchmarks emit and
             ``benchmarks/check_regression.py`` gates on.
 """
-from repro.telemetry.metrics import (COUNTER_KEYS, HIST_BUCKETS, LEGACY_KEYS,
-                                     PHASE_OF, Metrics, Recorder,
-                                     init_metrics, metrics_specs)
+from repro.telemetry.metrics import (COUNTER_KEYS, GAUGE_KEYS, HIST_BUCKETS,
+                                     LEGACY_KEYS, LIFECYCLE_KEYS, PHASE_OF,
+                                     Metrics, Recorder, init_metrics,
+                                     metrics_specs)
 from repro.telemetry.trace import (Span, clear, export, profile, span, spans)
 from repro.telemetry import report
 
 __all__ = [
-    "COUNTER_KEYS", "HIST_BUCKETS", "LEGACY_KEYS", "PHASE_OF", "Metrics",
-    "Recorder", "init_metrics", "metrics_specs", "Span", "clear", "export",
-    "profile", "span", "spans", "report",
+    "COUNTER_KEYS", "GAUGE_KEYS", "HIST_BUCKETS", "LEGACY_KEYS",
+    "LIFECYCLE_KEYS", "PHASE_OF", "Metrics", "Recorder", "init_metrics",
+    "metrics_specs", "Span", "clear", "export", "profile", "span", "spans",
+    "report",
 ]

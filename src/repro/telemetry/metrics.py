@@ -14,7 +14,16 @@ with three groups of small per-rank device buffers:
                                    lost to a running sum;
   hists      {name: (1, B) f32}    fixed-size histograms (spikes-per-step
                                    fraction, subscription occupancy,
-                                   traversal restart depth).
+                                   traversal restart depth);
+  gauges     {name: (1,) f32}      last-written values (SET, not summed) —
+                                   the device-side health verdict computed
+                                   at the end of every ``sim_chunk`` inside
+                                   the jitted scan (``GAUGE_KEYS``): a
+                                   NaN/Inf census of the physical state,
+                                   live synapse-table entry counts, and the
+                                   psum'd ``health_flags`` bitmask the
+                                   fault-tolerant runner polls each
+                                   checkpoint interval (DESIGN.md §10).
 
 Every leaf keeps its leading per-rank axis of size 1 so the whole tree
 shards over the 'ranks' mesh axis like the old counters did
@@ -72,6 +81,27 @@ HIST_BUCKETS = {
     "frontier_depth": 8,     # Barnes-Hut restarts per phase-B query
 }
 
+# gauges: last-written (not summed) per-rank health values, refreshed at
+# the end of every sim_chunk inside the jitted scan (sim/phases.py).
+GAUGE_KEYS = (
+    "health_flags",      # psum'd bitmask of HEALTH_* below (same on
+                         # every rank; read with max(), never sum())
+    "nonfinite_state",   # rank-local NaN/Inf count over v/u/calcium/
+                         # rate/positions
+    "out_edges_live",    # rank-local live out_edges entries (>= 0)
+    "in_edges_live",     # rank-local live in_edges entries (>= 0)
+)
+
+# health_flags bits (DESIGN.md §10)
+HEALTH_NONFINITE = 1     # NaN/Inf anywhere in the physical state
+HEALTH_ASYMMETRY = 2     # sum(out_live) != sum(in_live) w/o overflow
+HEALTH_CONSERVATION = 4  # live entries outside the [2F-2D, 2F-D] bound
+
+# host-side runner lifecycle counters, merged into Simulator.stats() and
+# the repro.telemetry/v1 report (runtime/sim_runner.py maintains them)
+LIFECYCLE_KEYS = ("checkpoint_saves", "checkpoint_restores", "rollbacks",
+                  "restarts", "degrade_events")
+
 DEFAULT_HISTORY = 64         # per-chunk ring length (BrainConfig.metrics_history)
 
 
@@ -84,6 +114,7 @@ class Metrics:
     counters: Dict[str, Any]
     per_chunk: Dict[str, Any]
     hists: Dict[str, Any]
+    gauges: Dict[str, Any]
 
     # -------------------------------------------------- dict-compat reads
     def __getitem__(self, key):
@@ -128,11 +159,19 @@ class Metrics:
             pc[k] = ring.at[0, slot].set(delta)
         return dataclasses.replace(self, per_chunk=pc)
 
+    def set_gauges(self, updates: Dict[str, Any]) -> "Metrics":
+        """Overwrite the named gauges with fresh scalar values (broadcast
+        to the (1,) per-rank leaf). Gauges are levels, not totals."""
+        g = dict(self.gauges)
+        for k, v in updates.items():
+            g[k] = jnp.reshape(jnp.asarray(v, jnp.float32), (1,))
+        return dataclasses.replace(self, gauges=g)
+
 
 def _flatten_with_keys(m: Metrics):
     K = jax.tree_util.DictKey
     return (((K("counters"), m.counters), (K("per_chunk"), m.per_chunk),
-             (K("hists"), m.hists)), None)
+             (K("hists"), m.hists), (K("gauges"), m.gauges)), None)
 
 
 jax.tree_util.register_pytree_with_keys(
@@ -147,7 +186,8 @@ def init_metrics(history: int = DEFAULT_HISTORY) -> Metrics:
         per_chunk={k: jnp.zeros((1, history), jnp.float32)
                    for k in COUNTER_KEYS},
         hists={k: jnp.zeros((1, b), jnp.float32)
-               for k, b in HIST_BUCKETS.items()})
+               for k, b in HIST_BUCKETS.items()},
+        gauges={k: jnp.zeros((1,), jnp.float32) for k in GAUGE_KEYS})
 
 
 def metrics_specs(m: Metrics) -> Metrics:
@@ -156,7 +196,8 @@ def metrics_specs(m: Metrics) -> Metrics:
     return Metrics(
         counters={k: P("ranks") for k in m.counters},
         per_chunk={k: P("ranks", None) for k in m.per_chunk},
-        hists={k: P("ranks", None) for k in m.hists})
+        hists={k: P("ranks", None) for k in m.hists},
+        gauges={k: P("ranks") for k in m.gauges})
 
 
 # ==================================================================

@@ -18,7 +18,10 @@ Schema (``repro.telemetry/v1``)::
      "cases": {"<case>": {"params": {...},     # shapes: n_per_rank, ...
                           "metrics": {...}}},  # flat floats: compile_ms,
                                                # steady_us_per_*, ratios
-     "counters": {...}?, "histograms": {...}?, "spans": [...]?}
+     "counters": {...}?, "histograms": {...}?, "spans": [...]?,
+     "lifecycle": {...}?}                      # runner fault-tolerance
+                                               # counters (saves/restores/
+                                               # rollbacks/restarts/degrades)
 
 ``normalize`` also reads the PRE-schema flat ``BENCH_*.json`` layouts, so
 the regression gate compares old committed baselines and new smoke runs
@@ -46,13 +49,29 @@ def timing(compile_ms: float, steady_us: float, unit: str = "chunk") -> dict:
 
 def counters_block(metrics) -> dict:
     """Serialize a (host or device) ``telemetry.metrics.Metrics``:
-    summed totals AND the per-rank vectors (nothing collapsed)."""
+    summed totals AND the per-rank vectors (nothing collapsed), plus the
+    health gauges (``health_flags`` reduces with max — it is a psum'd
+    replicated bitmask, not a per-rank total)."""
     tot, per_rank = {}, {}
     for k, v in metrics.counters.items():
         a = np.asarray(v)
         tot[k] = float(a.sum())
         per_rank[k] = [float(x) for x in a.reshape(-1)]
-    return {"total": tot, "per_rank": per_rank}
+    out = {"total": tot, "per_rank": per_rank}
+    gauges = getattr(metrics, "gauges", None)
+    if gauges:
+        out["gauges"] = {
+            k: float(np.asarray(v).max() if k == "health_flags"
+                     else np.asarray(v).sum())
+            for k, v in gauges.items()}
+    return out
+
+
+def lifecycle_block(lifecycle: dict) -> dict:
+    """Serialize the runner lifecycle counters (checkpoint saves/
+    restores, rollbacks, restarts, degrade events) — host-side ints from
+    ``Simulator.lifecycle`` / ``Simulator.stats()``."""
+    return {k: int(v) for k, v in lifecycle.items()}
 
 
 def histograms_block(metrics) -> dict:
@@ -82,7 +101,8 @@ def make_report(bench: str, cases: Dict[str, dict], *, smoke: bool = False,
                 mesh: Optional[dict] = None, counters: Optional[dict] = None,
                 histograms: Optional[dict] = None,
                 spans: Optional[list] = None,
-                roofline: Optional[dict] = None) -> dict:
+                roofline: Optional[dict] = None,
+                lifecycle: Optional[dict] = None) -> dict:
     rep = {"schema": SCHEMA, "bench": bench, "smoke": bool(smoke),
            "cases": cases}
     if mesh is not None:
@@ -95,6 +115,8 @@ def make_report(bench: str, cases: Dict[str, dict], *, smoke: bool = False,
         rep["spans"] = spans
     if roofline is not None:
         rep["roofline"] = roofline
+    if lifecycle is not None:
+        rep["lifecycle"] = lifecycle_block(lifecycle)
     return rep
 
 

@@ -1,0 +1,420 @@
+"""Fault-tolerance runtime tests (DESIGN.md §10).
+
+In-process (single device): atomic heartbeat, TrainingRunner resume/
+rollback/preemption, checkpoint checksum verification + typed corruption
+errors, elastic.remesh_restore (LM path), and the SimulationRunner's
+recovery paths driven by the runtime.chaos injectors.
+
+Subprocess (4 host devices, same pattern as tests/test_multidevice.py):
+kill-and-resume bit-identity across exchange layouts and activity
+lowerings, elastic brain restore R=4 -> R=2, and the overflow
+degradation ladder.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint import manager  # noqa: E402
+from repro.configs.msp_brain import BrainConfig  # noqa: E402
+from repro.runtime import chaos, elastic, fault_tolerance as ft  # noqa: E402
+from repro.runtime.sim_runner import (SimRunnerConfig,  # noqa: E402
+                                      SimulationRunner)
+from repro.sim import Simulator  # noqa: E402
+
+SMALL = dict(neurons_per_rank=32, local_levels=3, frontier_cap=32,
+             max_synapses=8, rate_period=10, requests_cap_factor=100,
+             subs_cap_factor=100)
+
+
+def run_py(code, devices=4, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(jax.device_get(x)),
+                              np.asarray(jax.device_get(y)))
+
+
+# ===================================================================
+# heartbeat
+# ===================================================================
+def test_heartbeat_write_is_atomic(tmp_path):
+    """write_heartbeat never leaves a torn file or a stray temp."""
+    hb = str(tmp_path / "hb.json")
+    for step in range(5):
+        ft.write_heartbeat(hb, {"step": step})
+        with open(hb) as f:          # always a complete JSON document
+            d = json.load(f)
+        assert d["step"] == step and "t" in d
+    assert os.listdir(tmp_path) == ["hb.json"]   # no tmp residue
+
+
+# ===================================================================
+# TrainingRunner (the seed's LM-path runner)
+# ===================================================================
+def _toy_runner(tmp_path, **kw):
+    def step_fn(params, opt, batch):
+        params = {"w": params["w"] + batch.sum()}
+        return params, opt + 1, {"loss": batch.sum()}
+
+    def data():
+        while True:
+            yield jnp.ones((2,))
+
+    cfg = ft.RunnerConfig(ckpt_dir=str(tmp_path / "ck"), ckpt_every=2,
+                          keep=3, **kw)
+    return ft.TrainingRunner(cfg, step_fn, {"w": jnp.zeros(())},
+                             jnp.zeros((), jnp.int32), data())
+
+
+def test_training_runner_resume(tmp_path):
+    r = _toy_runner(tmp_path)
+    assert r.run(5) == "done"
+    r2 = _toy_runner(tmp_path)
+    assert r2.try_resume()
+    assert r2.step == 5
+    assert float(r2.params["w"]) == 10.0        # 5 steps x batch.sum()==2
+
+
+def test_training_runner_nan_rollback(tmp_path):
+    r = _toy_runner(tmp_path)
+    fired = []
+
+    def poison(step, batch):
+        # once: a step-keyed trigger would re-fire on the post-rollback
+        # replay of the same step and exhaust max_rollbacks
+        if step == 3 and not fired:
+            fired.append(step)
+            return batch * jnp.nan
+        return batch
+
+    assert r.run(6, poison_hook=poison) == "done"
+    assert r.rollbacks == 1
+    assert float(r.params["w"]) == 12.0         # poisoned window skipped
+
+
+def test_training_runner_preempt(tmp_path):
+    r = _toy_runner(tmp_path)
+    orig = r._heartbeat
+
+    def hb_and_preempt():
+        orig()
+        if r.step == 3:
+            r.preempt()
+
+    r._heartbeat = hb_and_preempt
+    assert r.run(10) == "preempted"
+    r2 = _toy_runner(tmp_path)
+    assert r2.try_resume() and r2.step == 3
+
+
+def test_elastic_remesh_restore_lm(tmp_path):
+    """The seed LM path: restore onto a fresh (1,1) mesh."""
+    params = {"tok_embed": jnp.ones((8, 4))}
+    opt = {"m": {"tok_embed": jnp.zeros((8, 4))},
+           "v": {"tok_embed": jnp.zeros((8, 4))}, "step": jnp.zeros(())}
+    manager.save(str(tmp_path), 7, {"params": params, "opt": opt})
+    mesh = elastic.make_elastic_mesh(jax.devices()[:1])
+    step, tree, _ = elastic.remesh_restore(
+        str(tmp_path), {"params": params, "opt": opt}, mesh)
+    assert step == 7
+    _leaves_equal(tree["params"], params)
+
+
+# ===================================================================
+# checkpoint verification
+# ===================================================================
+def _save_steps(tmp_path, steps):
+    for s in steps:
+        manager.save(str(tmp_path), s, {"a": jnp.arange(4.0) + s,
+                                        "b": jnp.ones((2, 2)) * s})
+    return {"a": jnp.zeros(4), "b": jnp.zeros((2, 2))}
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate", "manifest"])
+def test_corrupt_checkpoint_raises_typed(tmp_path, mode):
+    target = _save_steps(tmp_path, [1, 2])
+    chaos.corrupt_checkpoint(str(tmp_path), step=2, mode=mode)
+    with pytest.raises(manager.CorruptCheckpointError):
+        manager.restore(str(tmp_path), 2, target)
+    # restore_latest walks past the corrupt newest step
+    ck = manager.AsyncCheckpointer(str(tmp_path))
+    step, tree, _ = ck.restore_latest(target)
+    assert step == 1
+    assert np.array_equal(np.asarray(tree["a"]), np.arange(4.0) + 1)
+
+
+def test_load_arrays_roundtrip_and_verify(tmp_path):
+    _save_steps(tmp_path, [3])
+    arrays, manifest = manager.load_arrays(str(tmp_path), 3)
+    assert np.array_equal(arrays["a"], np.arange(4.0) + 3)
+    assert all("crc32" in v for v in manifest["leaves"].values())
+    chaos.corrupt_checkpoint(str(tmp_path), step=3, mode="flip")
+    with pytest.raises(manager.CorruptCheckpointError):
+        manager.load_arrays(str(tmp_path), 3)
+
+
+# ===================================================================
+# SimulationRunner, single rank
+# ===================================================================
+@pytest.fixture(scope="module")
+def small_cfg():
+    return BrainConfig(**SMALL)
+
+
+@pytest.fixture(scope="module")
+def ref_state(small_cfg):
+    """Final state of an uninterrupted 6-chunk run (the bit-identity
+    reference for every recovery test below)."""
+    sim = Simulator(small_cfg)
+    sim.run(6)
+    return sim.state
+
+
+def test_runner_matches_plain_run(tmp_path, small_cfg, ref_state):
+    r = SimulationRunner(SimRunnerConfig(str(tmp_path / "ck"),
+                                         ckpt_every=2), cfg=small_cfg)
+    assert r.run(6) == "done"
+    _leaves_equal(r.sim.state, ref_state)
+    s = r.sim.stats()
+    assert s["checkpoint_saves"] >= 3 and s["rollbacks"] == 0
+    # health gauges: clean verdict, live-entry census populated
+    h = r.sim.health()
+    assert h["health_flags"] == 0
+    assert h["out_edges_live"] == h["in_edges_live"] > 0
+
+
+def test_runner_nan_rollback_recovers_bit_identical(tmp_path, small_cfg,
+                                                    ref_state):
+    r = SimulationRunner(SimRunnerConfig(str(tmp_path / "ck"),
+                                         ckpt_every=2), cfg=small_cfg)
+    r.chaos_hooks.append(chaos.poison_nan_once(field="v", after_chunk=3))
+    assert r.run(6) == "done"
+    assert r.sim.lifecycle["rollbacks"] >= 1
+    _leaves_equal(r.sim.state, ref_state)
+
+
+def test_runner_probe_flags_poisoned_state(small_cfg):
+    from repro.telemetry import metrics as tm
+    sim = Simulator(small_cfg)
+    sim.run(1)
+    assert sim.probe_health() == 0
+    st = sim.state
+    arr = np.array(jax.device_get(st.neurons.calcium))
+    arr[0] = np.inf
+    sim._state = st._replace(neurons=st.neurons._replace(
+        calcium=jax.device_put(arr, st.neurons.calcium.sharding)))
+    assert sim.probe_health() & tm.HEALTH_NONFINITE
+
+
+def test_runner_preempt_resume_bit_identical(tmp_path, small_cfg,
+                                             ref_state):
+    ck = str(tmp_path / "ck")
+    r = SimulationRunner(SimRunnerConfig(ck, ckpt_every=2), cfg=small_cfg)
+    r.chaos_hooks.append(chaos.preempt_after(4))
+    assert r.run(6) == "preempted"
+    r2 = SimulationRunner(SimRunnerConfig(ck, ckpt_every=2), cfg=small_cfg)
+    cur = int(jax.device_get(r2.sim.state.chunk))
+    assert cur == 4 and r2.sim.lifecycle["restarts"] == 1
+    assert r2.run(6 - cur) == "done"
+    _leaves_equal(r2.sim.state, ref_state)
+
+
+def test_runner_resume_skips_corrupt_newest(tmp_path, small_cfg):
+    ck = str(tmp_path / "ck")
+    r = SimulationRunner(SimRunnerConfig(ck, ckpt_every=2), cfg=small_cfg)
+    assert r.run(4) == "done"
+    newest = chaos.corrupt_checkpoint(ck, mode="truncate")
+    r2 = SimulationRunner(SimRunnerConfig(ck, ckpt_every=2), cfg=small_cfg)
+    assert int(jax.device_get(r2.sim.state.chunk)) < newest
+
+
+# ===================================================================
+# multi-rank, via subprocess (4 host devices)
+# ===================================================================
+_VARIANTS = [("dense", "reference"), ("sparse", "reference"),
+             ("dense", "fused"), ("sparse", "fused")]
+
+
+@pytest.mark.parametrize("exchange,activity", _VARIANTS)
+def test_kill_resume_bit_identical_4rank(exchange, activity):
+    """Kill after 2 of 4 chunks + resume in a fresh process-level runner
+    == uninterrupted run: every BrainState leaf and physics counter."""
+    out = run_py(f"""
+        import dataclasses, tempfile, os
+        import jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.runtime import chaos
+        from repro.runtime.sim_runner import (SimRunnerConfig,
+                                              SimulationRunner)
+        from repro.sim import Simulator
+        cfg = BrainConfig(neurons_per_rank=64, local_levels=3,
+                          frontier_cap=32, max_synapses=8, rate_period=10,
+                          requests_cap_factor=100, subs_cap_factor=100,
+                          rate_exchange={exchange!r},
+                          activity_impl={activity!r})
+        ref = Simulator(cfg); ref.run(4)
+        with tempfile.TemporaryDirectory() as d:
+            ck = os.path.join(d, 'ck')
+            r = SimulationRunner(SimRunnerConfig(ck, ckpt_every=1),
+                                 cfg=cfg)
+            r.chaos_hooks.append(chaos.preempt_after(2))
+            assert r.run(4) == 'preempted'
+            r2 = SimulationRunner(SimRunnerConfig(ck, ckpt_every=1),
+                                  cfg=cfg)
+            cur = int(jax.device_get(r2.sim.state.chunk))
+            assert cur == 2, cur
+            assert r2.run(4 - cur) == 'done'
+            for a, b in zip(jax.tree.leaves(ref.state),
+                            jax.tree.leaves(r2.sim.state)):
+                assert np.array_equal(np.asarray(jax.device_get(a)),
+                                      np.asarray(jax.device_get(b)))
+            sa, sb = ref.stats(), r2.sim.stats()
+            from repro import telemetry
+            for k in telemetry.COUNTER_KEYS:
+                assert sa[k] == sb[k], (k, sa[k], sb[k])
+        print('KILL_RESUME_OK')
+    """)
+    assert "KILL_RESUME_OK" in out
+
+
+def test_elastic_shrink_4_to_2_old_new_identical():
+    """A checkpoint written at R=4 resumes on R=2: the subscription
+    registry is rebuilt for the new rank count, and the old==new
+    connectivity bit-identity is preserved on the shrunken mesh."""
+    out = run_py("""
+        import dataclasses, tempfile, os
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.msp_brain import BrainConfig
+        from repro.runtime import elastic
+        from repro.sim import Simulator
+        base = BrainConfig(neurons_per_rank=64, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=10,
+                           spike_alg='old', requests_cap_factor=1000)
+        sim4 = Simulator(base)
+        sim4.run(2)
+        with tempfile.TemporaryDirectory() as d:
+            sim4.save(d)
+            mesh2 = Mesh(np.array(jax.devices()[:2]), ('ranks',))
+            res = {}
+            for alg in ['old', 'new']:
+                cfg2 = dataclasses.replace(
+                    base, neurons_per_rank=128, connectivity_alg=alg)
+                sim2, step = elastic.remesh_restore_brain(
+                    d, cfg2, mesh=mesh2)
+                assert step == 2
+                # the restored global arrays match the writer's exactly
+                for name in ('out_edges', 'in_edges', 'positions'):
+                    assert np.array_equal(
+                        np.asarray(jax.device_get(getattr(sim4.state,
+                                                          name))),
+                        np.asarray(jax.device_get(getattr(sim2.state,
+                                                          name)))), name
+                sim2.run(2)
+                assert sim2.health()['health_flags'] == 0
+                res[alg] = (
+                    np.sort(np.asarray(jax.device_get(
+                        sim2.state.out_edges)), 1),
+                    np.sort(np.asarray(jax.device_get(
+                        sim2.state.in_edges)), 1),
+                    sim2.stats()['synapses_formed'])
+            assert np.array_equal(res['old'][0], res['new'][0])
+            assert np.array_equal(res['old'][1], res['new'][1])
+            assert res['old'][2] == res['new'][2] > 0
+        print('ELASTIC_OLD_NEW_OK')
+    """)
+    assert "ELASTIC_OLD_NEW_OK" in out
+
+
+def test_elastic_shrink_sparse_matches_dense():
+    """The same R=4 sparse checkpoint restored at R=2 as sparse and as
+    dense agrees bitwise on the physical state after two more chunks —
+    the rebuilt registry is exactly the dense exchange's information."""
+    out = run_py("""
+        import dataclasses, tempfile, os
+        import jax, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs.msp_brain import BrainConfig
+        from repro.runtime import elastic
+        from repro.sim import Simulator
+        base = BrainConfig(neurons_per_rank=64, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=10,
+                           requests_cap_factor=100, subs_cap_factor=100,
+                           rate_exchange='sparse')
+        sim4 = Simulator(base)
+        sim4.run(2)
+        with tempfile.TemporaryDirectory() as d:
+            sim4.save(d)
+            mesh2 = Mesh(np.array(jax.devices()[:2]), ('ranks',))
+            res = {}
+            for exch in ['sparse', 'dense']:
+                cfg2 = dataclasses.replace(base, neurons_per_rank=128,
+                                           rate_exchange=exch)
+                sim2, _ = elastic.remesh_restore_brain(d, cfg2,
+                                                       mesh=mesh2)
+                sim2.run(2)
+                st = sim2.state
+                res[exch] = [np.asarray(jax.device_get(x)) for x in
+                             (st.neurons.v, st.neurons.calcium,
+                              st.neurons.rate, st.out_edges, st.in_edges)]
+            for a, b in zip(res['sparse'], res['dense']):
+                assert np.array_equal(a, b)
+        print('ELASTIC_SPARSE_DENSE_OK')
+    """)
+    assert "ELASTIC_SPARSE_DENSE_OK" in out
+
+
+def test_degrade_ladder_4rank():
+    """Persistent subscription overflow first grows the achieved cap,
+    and with growth disabled falls back to the dense layout; the run
+    completes either way and the escalations are counted."""
+    out = run_py("""
+        import dataclasses, tempfile, os
+        from repro.configs.msp_brain import BrainConfig
+        from repro.runtime import chaos
+        from repro.runtime.sim_runner import (SimRunnerConfig,
+                                              SimulationRunner)
+        base = chaos.overflow_config(
+            BrainConfig(neurons_per_rank=256, local_levels=3,
+                        frontier_cap=32, max_synapses=16, rate_period=10,
+                        rate_exchange='sparse'))
+        with tempfile.TemporaryDirectory() as d:
+            r = SimulationRunner(
+                SimRunnerConfig(os.path.join(d, 'ck'), ckpt_every=2,
+                                overflow_patience=1), cfg=base)
+            assert r.run(4) == 'done'
+            assert r.sim.stats()['degrade_events'] >= 1
+            assert r.sim.cfg.rate_exchange == 'sparse'
+            assert r.sim.cfg.subs_cap_factor > base.subs_cap_factor
+        with tempfile.TemporaryDirectory() as d:
+            r = SimulationRunner(
+                SimRunnerConfig(os.path.join(d, 'ck'), ckpt_every=2,
+                                overflow_patience=1, subs_growth_factor=0),
+                cfg=base)
+            assert r.run(4) == 'done'
+            assert r.sim.cfg.rate_exchange == 'dense'
+            assert r.sim.stats()['degrade_events'] >= 1
+        print('DEGRADE_OK')
+    """)
+    assert "DEGRADE_OK" in out

@@ -115,9 +115,12 @@ def test_stats_are_summed_plain_floats():
     sim = Simulator.from_config(SMALL)
     sim.run(2)
     s = sim.stats()
-    assert set(s) == set(engine.STAT_KEYS)
+    # device counters + the host-side runner lifecycle counters
+    from repro import telemetry
+    assert set(s) == set(engine.STAT_KEYS) | set(telemetry.LIFECYCLE_KEYS)
     assert all(isinstance(v, float) for v in s.values())
     assert s["synapses_formed"] > 0
+    assert s["rollbacks"] == 0.0
 
 
 def test_run_with_recorder_matches_library_history():
