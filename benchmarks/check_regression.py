@@ -85,6 +85,9 @@ RULES = (
     Rule("*_ms_per_ckpt", False, 3.0, True),
     # scale-dependent measured byte counters: deterministic, tight
     Rule("*_bytes_per_*", False, 0.25, True),
+    # per-stage connectivity attribution (sort/tree/apply/exchange
+    # roofline or analytic bytes — bench_connectivity): deterministic
+    Rule("*_hbm_bytes", False, 0.25, True),
     Rule("*_records_per_*", False, 0.25, True),
 )
 

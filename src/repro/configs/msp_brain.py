@@ -67,6 +67,18 @@ class BrainConfig:
     # bit-identical to the reference (shared core math + counter-hash PRNG;
     # DESIGN.md §6). Works with either connectivity_alg.
     connectivity_impl: str = "reference"
+    # local octree build: 'reference' = jnp Morton encode + stable-argsort
+    # slot ranks; 'fused' = the Pallas Morton + LSD radix-sort kernel
+    # (kernels/radix_sort.py) — codes, leaf slots, and histogram state stay
+    # VMEM-resident; integer ranks are computed by the same stable-rank
+    # definition, so the build is bit-identical (DESIGN.md §11)
+    tree_impl: str = "reference"
+    # synapse-table apply: 'reference' = jnp segment-rank passes
+    # (remove_edges_by_messages -> compact -> accept_requests, plus the
+    # deletion-routing buffer build); 'fused' = one VMEM-resident Pallas
+    # pass over the (n, s_max) edge table per stage
+    # (kernels/synapse_apply.py), bit-identical (DESIGN.md §11)
+    apply_impl: str = "reference"
     # length of the device-side per-chunk metrics ring (telemetry.metrics:
     # per-Delta counter increments at chunk % history; DESIGN.md §9)
     metrics_history: int = 64

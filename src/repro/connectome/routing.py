@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.connectome import synapses as syn
 from repro.connectome import traverse
 from repro.connectome import tree as ctree
+from repro.sim import registry
 
 
 def cap_requests(cfg, num_ranks: int):
@@ -97,6 +98,27 @@ def cap_deletions(cfg, lesions: bool = False):
                max(16, (n // 4) * cfg.requests_cap_factor))
 
 
+def route_build_core(flat_other, flat_mine, n: int, num_ranks: int, cap: int,
+                     ranker):
+    """Build the per-destination (num_ranks, cap, 2) notification buffers
+    from the flattened (partner gid, my gid) pairs — the pre-collective half
+    of ``route_deletions``, shared verbatim by the reference path and the
+    fused kernel body (kernels/synapse_apply.py). ``ranker(ids, buckets)``
+    supplies the stable within-destination slot ranks (``positions_within``
+    or the kernel's per-bucket cumsum ``bucket_ranks`` — integer-identical).
+    Returns (buf, dropped count)."""
+    valid = flat_other >= 0
+    dest = jnp.where(valid, flat_other // n, num_ranks)
+    slot = ranker(dest, num_ranks + 1)
+    ok = valid & (slot < cap)
+    buf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
+    buf = buf.at[jnp.where(ok, dest, num_ranks),
+                 jnp.where(ok, slot, 0)].set(
+        jnp.stack([jnp.where(ok, flat_other, -1),
+                   jnp.where(ok, flat_mine, -1)], -1), mode="drop")
+    return buf, jnp.sum(valid & ~ok).astype(jnp.float32)
+
+
 def route_deletions(kill, edges, my_gid_col, cfg, axis_name, num_ranks: int,
                     lesions: bool):
     """All-to-all the (partner gid, my gid) retraction notifications (paper:
@@ -105,20 +127,12 @@ def route_deletions(kill, edges, my_gid_col, cfg, axis_name, num_ranks: int,
     n = cfg.neurons_per_rank
     flat_other = jnp.where(kill, edges, -1).reshape(-1)
     flat_mine = jnp.broadcast_to(my_gid_col, kill.shape).reshape(-1)
-    valid = flat_other >= 0
-    dest = jnp.where(valid, flat_other // n, num_ranks)
     cap = cap_deletions(cfg, lesions)
-    slot = ctree.positions_within(dest, num_ranks + 1)
-    ok = valid & (slot < cap)
-    buf = jnp.full((num_ranks, cap, 2), -1, jnp.int32)
-    buf = buf.at[jnp.where(ok, dest, num_ranks),
-                 jnp.where(ok, slot, 0)].set(
-        jnp.stack([jnp.where(ok, flat_other, -1),
-                   jnp.where(ok, flat_mine, -1)], -1), mode="drop")
+    buf, dropped = route_build_core(flat_other, flat_mine, n, num_ranks, cap,
+                                    ctree.positions_within)
     if num_ranks > 1:
         buf = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=True)
-    return buf.reshape(num_ranks * cap, 2), \
-        jnp.sum(valid & ~ok).astype(jnp.float32)
+    return buf.reshape(num_ranks * cap, 2), dropped
 
 
 def formation_new(cfg, positions, local_tree, vacant_d, in_edges, gids,
@@ -157,8 +171,10 @@ def formation_new(cfg, positions, local_tree, vacant_d, in_edges, gids,
         local_tree, positions, vacant_d, r_pos,
         jnp.where(r_valid, r_src, -2), jnp.clip(r_cell, 0, None), r_valid,
         cfg, num_ranks, rank * n, chunk=chunk)
-    # accept/decline where the target lives (same rank — no extra comms)
-    acc, new_in = syn.accept_requests(
+    # accept/decline where the target lives (same rank — no extra comms);
+    # the table mutation dispatches through the "apply" registry domain
+    apply_impl = registry.resolve("apply", cfg.apply_impl)
+    acc, new_in = apply_impl.accept(
         jnp.clip(tgt - rank * n, 0, n - 1), r_src, bvalid & (tgt >= 0),
         vacant_d, in_edges, key)
     # 9B responses retrace the request route
@@ -222,7 +238,8 @@ def formation_old(cfg, positions, local_tree, vacant_d, in_edges, gids,
     r_src = ibuf[..., 0].reshape(-1)
     r_tgt = ibuf[..., 1].reshape(-1)
     r_valid = (r_src >= 0) & (r_tgt >= 0)
-    acc, new_in = syn.accept_requests(
+    apply_impl = registry.resolve("apply", cfg.apply_impl)
+    acc, new_in = apply_impl.accept(
         jnp.clip(r_tgt - rank * n, 0, n - 1), r_src, r_valid, vacant_d,
         in_edges, key)
     rbuf = acc.astype(jnp.int32).reshape(num_ranks, cap)

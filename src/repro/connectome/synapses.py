@@ -7,15 +7,25 @@ seed's sequential ``fori_loop`` over deletion messages and the argsort-based
 keyed per-(src,tgt) priorities so they are independent of buffer ordering —
 the property that lets two differently-routed request streams commit
 identical edge tables (DESIGN.md §2).
+
+The table-mutating stages are a registered phase (registry domain "apply",
+selected by ``BrainConfig.apply_impl``): an ``ApplyImpl`` bundles the
+deletion drain (``remove_edges_by_messages`` -> ``compact``), the formation
+``accept``, and the deletion-routing buffer build. 'reference' runs the jnp
+ops below; 'fused' runs the same shared cores inside one VMEM-resident
+Pallas pass over the edge table per stage (kernels/synapse_apply.py) —
+bit-identical because every rank/priority is either integer-exact or the
+very same XLA expression on the same inputs (DESIGN.md §11).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.connectome.tree import positions_within
+from repro.sim import registry
 
 
 class SynapseTable(NamedTuple):
@@ -52,17 +62,14 @@ def edge_priority(key, a_gid, b_gid):
     return jax.vmap(lambda kk: jax.random.uniform(kk))(k)
 
 
-def accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key):
-    """Targets accept as many requests as they have vacant dendritic elements
-    (random subset — paper §III-A(c)); accepted requests are written into
-    in_edges (assumed compacted). Returns (accept (Q,) bool, new in_edges)."""
+def accept_core(tgt_lid, src_gid, valid, vacant_d, in_edges, prio):
+    """Acceptance with the per-request priorities precomputed — the part
+    shared verbatim by the reference path and the fused kernel body
+    (kernels/synapse_apply.py), so the float priorities entering both are
+    the same values and the decisions are bit-identical."""
     n, s_max = in_edges.shape
     q = tgt_lid.shape[0]
     lid = jnp.where(valid, tgt_lid, n)                  # bucket n = invalid
-    # acceptance rank within each target by keyed (src,tgt) priority —
-    # ordering-independent (paper: 'accept ... randomly')
-    prio = edge_priority(key, jnp.where(valid, src_gid, 0),
-                         jnp.where(valid, lid, 0))
     order = jnp.lexsort((prio, lid))
     rank_p = positions_within(lid[order], n + 1)
     rank_in_tgt = jnp.zeros((q,), jnp.int32).at[order].set(rank_p)
@@ -79,6 +86,24 @@ def accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key):
     return accept, new_in
 
 
+def request_priority(key, tgt_lid, src_gid, valid):
+    """The keyed per-(src, tgt) acceptance priorities of a request buffer
+    (invalid rows draw the (0, 0) stream — never accepted, value ignored)."""
+    return edge_priority(key, jnp.where(valid, src_gid, 0),
+                         jnp.where(valid, tgt_lid, 0))
+
+
+def accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key):
+    """Targets accept as many requests as they have vacant dendritic elements
+    (random subset — paper §III-A(c)); accepted requests are written into
+    in_edges (assumed compacted). Returns (accept (Q,) bool, new in_edges).
+
+    Acceptance rank within each target is by keyed (src, tgt) priority —
+    ordering-independent (paper: 'accept ... randomly')."""
+    prio = request_priority(key, tgt_lid, src_gid, valid)
+    return accept_core(tgt_lid, src_gid, valid, vacant_d, in_edges, prio)
+
+
 def add_out_edges(out_edges, tgt_gid, accept):
     """Write accepted targets into the source neurons' out-edge tables.
     tgt_gid/accept: (n_sources,) — one pending request per source neuron."""
@@ -92,16 +117,26 @@ def add_out_edges(out_edges, tgt_gid, accept):
 def retract_synapses(key, edges, n_delete, row_gids):
     """Randomly break ``n_delete[i]`` bound synapses of neuron i (paper: 'one
     is chosen randomly'). Priority is keyed by (row gid, edge gid) so the
-    choice is independent of slot ordering. Returns (new_edges, kill mask)."""
+    choice is independent of slot ordering. Returns (new_edges, kill mask).
+
+    Victims are the ``n_delete[i]`` lowest-priority occupied slots, found by
+    rank-by-counting over the (s_max, s_max) pairwise comparisons with
+    (priority, slot) lexicographic ties — the exact rank a stable per-row
+    argsort would assign (property-tested against that oracle in
+    tests/test_connectome.py), without the argsort or its full-table rank
+    scatter. O(n * s_max^2) elementwise compares, all fused."""
     n, s_max = edges.shape
     occupied = edges >= 0
     flat_prio = edge_priority(
         key, jnp.broadcast_to(row_gids[:, None], edges.shape).reshape(-1),
         jnp.where(occupied, edges, 0).reshape(-1))
     prio = jnp.where(occupied, flat_prio.reshape(edges.shape), 2.0)
-    order = jnp.argsort(prio, axis=1)                   # occupied first, random
-    ranks = jnp.zeros_like(edges).at[
-        jnp.arange(n)[:, None], order].set(jnp.arange(s_max)[None, :])
+    # rank[i, j] = #{k: (prio[i, k], k) < (prio[i, j], j)} — occupied slots
+    # (prio < 1) always rank below the 2.0 pads, exactly as under argsort
+    lt = prio[:, :, None] < prio[:, None, :]
+    tie = (prio[:, :, None] == prio[:, None, :]) & \
+        (jnp.arange(s_max)[:, None] < jnp.arange(s_max)[None, :])
+    ranks = jnp.sum(lt | tie, axis=1)
     kill = occupied & (ranks < n_delete[:, None])
     return jnp.where(kill, -1, edges), kill
 
@@ -142,3 +177,86 @@ def remove_edges_by_messages(edges, msg_lid, msg_gid, msg_valid):
     kill_sorted = e_s & (occ_rank < m_group)
     kill = jnp.zeros((q + n * s_max,), bool).at[order].set(kill_sorted)
     return jnp.where(kill[q:].reshape(n, s_max), -1, edges)
+
+
+# ------------------------------------------------------------ apply registry
+class ApplyImpl(NamedTuple):
+    """One registered implementation of the synapse-apply stages (registry
+    domain "apply"). ``deletion`` drains routed retraction messages out of
+    one edge table and re-compacts it; ``accept`` admits formation requests
+    into the (compacted) in-edge table; ``route`` builds + exchanges the
+    per-destination deletion-notification buffers."""
+    deletion: Callable   # (edges, msg_lid, msg_gid, msg_valid, interpret=None)
+    accept: Callable     # (tgt_lid, src_gid, valid, vacant_d, in_edges, key,
+    #                       interpret=None) -> (accept, new_in)
+    route: Callable      # (kill, edges, my_gid_col, cfg, axis_name,
+    #                       num_ranks, lesions, interpret=None)
+    #                       -> (msgs (R*cap, 2), dropped)
+
+
+def _deletion_reference(edges, msg_lid, msg_gid, msg_valid, interpret=None):
+    return compact(remove_edges_by_messages(edges, msg_lid, msg_gid,
+                                            msg_valid))
+
+
+def _accept_reference(tgt_lid, src_gid, valid, vacant_d, in_edges, key,
+                      interpret=None):
+    return accept_requests(tgt_lid, src_gid, valid, vacant_d, in_edges, key)
+
+
+def _route_reference(kill, edges, my_gid_col, cfg, axis_name, num_ranks,
+                     lesions, interpret=None):
+    from repro.connectome import routing  # lazy: routing imports us
+    return routing.route_deletions(kill, edges, my_gid_col, cfg, axis_name,
+                                   num_ranks, lesions)
+
+
+def _deletion_fused(edges, msg_lid, msg_gid, msg_valid, interpret=None):
+    """Kernel pass with the accept stage disabled (no valid requests): the
+    shared core then leaves the table untouched after remove+compact."""
+    from repro.kernels import ops as kops  # lazy: kernels import us
+    n = edges.shape[0]
+    zi = jnp.zeros((8,), jnp.int32)
+    new_edges, _ = kops.synapse_apply(
+        edges, msg_lid, msg_gid, msg_valid, zi, zi,
+        jnp.zeros((8,), bool), jnp.zeros((8,), jnp.float32),
+        jnp.zeros((n,), jnp.float32), interpret=interpret)
+    return new_edges
+
+
+def _accept_fused(tgt_lid, src_gid, valid, vacant_d, in_edges, key,
+                  interpret=None):
+    """Kernel pass with the deletion stage disabled (no valid messages).
+    Priorities are drawn OUTSIDE the kernel by the very same
+    ``request_priority`` expression the reference uses, so the floats
+    entering ``accept_core`` are bit-equal; the table (compacted on entry,
+    like the reference assumes) passes through remove+compact unchanged."""
+    from repro.kernels import ops as kops  # lazy: kernels import us
+    prio = request_priority(key, tgt_lid, src_gid, valid)
+    zi = jnp.zeros((8,), jnp.int32)
+    new_in, acc = kops.synapse_apply(
+        in_edges, zi, zi, jnp.zeros((8,), bool),
+        tgt_lid, src_gid, valid, prio, vacant_d, interpret=interpret)
+    return acc, new_in
+
+
+def _route_fused(kill, edges, my_gid_col, cfg, axis_name, num_ranks, lesions,
+                 interpret=None):
+    from repro.connectome import routing  # lazy: routing imports us
+    from repro.kernels import ops as kops  # lazy: kernels import us
+    cap = routing.cap_deletions(cfg, lesions)
+    flat_other = jnp.where(kill, edges, -1).reshape(-1)
+    flat_mine = jnp.broadcast_to(my_gid_col, kill.shape).reshape(-1)
+    buf, dropped = kops.route_build(flat_other, flat_mine,
+                                    n=cfg.neurons_per_rank,
+                                    num_ranks=num_ranks, cap=cap,
+                                    interpret=interpret)
+    if num_ranks > 1:
+        buf = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=True)
+    return buf.reshape(num_ranks * cap, 2), dropped[0]
+
+
+registry.register_phase("apply", "reference")(
+    ApplyImpl(_deletion_reference, _accept_reference, _route_reference))
+registry.register_phase("apply", "fused")(
+    ApplyImpl(_deletion_fused, _accept_fused, _route_fused))

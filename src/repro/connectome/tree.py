@@ -10,6 +10,15 @@ Two trees exist (paper Fig. 1):
   * the rank-local tree: levels b .. b+local_levels over the rank's own cells;
   * the replicated upper tree: levels 0 .. b, built from the all-exchanged
     branch nodes (Alg. 1, line 3).
+
+The build is a registered phase (registry domain "tree", selected by
+``BrainConfig.tree_impl``): 'reference' computes the per-leaf slot ranks with
+``positions_within`` (stable argsort + searchsorted), 'fused' gets the same
+(rel, slot) pair from the Pallas Morton radix-sort kernel
+(kernels/radix_sort.py) with the sort state VMEM-resident. Both feed the
+identical scatter-add/aggregation expressions (``_assemble_tree``), and the
+slot ranks are integer-exact by construction, so the two builds are
+bit-identical (tests/test_radix_sort.py, tests/test_connectome.py).
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import morton
+from repro.sim import registry
 
 
 class LocalTree(NamedTuple):
@@ -49,8 +59,40 @@ def positions_within(ids, num_buckets: int):
     return jnp.zeros((n,), jnp.int32).at[order].set(ranks)
 
 
+def _tree_geometry(rank, cfg, num_ranks: int):
+    """(leaf_level, n_leaf, base_cell) of the rank's subdomain block."""
+    b = morton.branch_level(num_ranks)
+    c_per = morton.cells_per_rank(num_ranks)
+    lloc = cfg.local_levels
+    return b + lloc, c_per * 8 ** lloc, rank * c_per
+
+
+def _assemble_tree(positions, weights, rel, slot, cfg, n_leaf: int,
+                   base_cell, members_cap: int) -> LocalTree:
+    """Shared back half of both builds: scatter-add the leaf level, aggregate
+    parents (reshape(-1, 8).sum), and fill the capped membership table from
+    the per-leaf slot ranks. Identical expressions for both impls — the
+    builds can only differ through (rel, slot), which are integer-exact."""
+    counts = [jnp.zeros((n_leaf,), jnp.float32).at[rel].add(weights)]
+    centroids = [jnp.zeros((n_leaf, 3), jnp.float32).at[rel].add(
+        positions * weights[:, None])]
+    for _ in range(cfg.local_levels):
+        counts.insert(0, counts[0].reshape(-1, 8).sum(1))
+        centroids.insert(0, centroids[0].reshape(-1, 8, 3).sum(1))
+
+    # leaf membership table (cap M per leaf; overflow dropped this round)
+    m = members_cap
+    ok = slot < m
+    tbl = jnp.full((n_leaf, m), -1, jnp.int32)
+    tbl = tbl.at[rel, jnp.where(ok, slot, m)].set(
+        jnp.arange(positions.shape[0], dtype=jnp.int32), mode="drop")
+    return LocalTree(tuple(counts), tuple(centroids), tbl,
+                     jnp.asarray(base_cell, jnp.int32))
+
+
+@registry.register_phase("tree", "reference")
 def build_local_tree(positions, weights, rank, cfg, num_ranks: int,
-                     members_cap: int = 4) -> LocalTree:
+                     members_cap: int = 4, interpret=None) -> LocalTree:
     """positions: (n,3); weights: (n,) vacant dendritic elements (>=0).
     rank: scalar int (traced ok). Returns the rank's subtree.
 
@@ -58,34 +100,35 @@ def build_local_tree(positions, weights, rank, cfg, num_ranks: int,
     than M neurons keeps the M lowest-indexed ones this round (the rest are
     invisible to member selection until the occupancy drops — a static-shape
     deviation, like the frontier cap)."""
-    b = morton.branch_level(num_ranks)
-    c_per = morton.cells_per_rank(num_ranks)
-    lloc = cfg.local_levels
-    leaf_level = b + lloc
-    base_cell = rank * c_per
-
+    leaf_level, n_leaf, base_cell = _tree_geometry(rank, cfg, num_ranks)
     leaf_cells_abs = morton.morton_encode(positions, leaf_level)
     # relative leaf index within the rank's subdomain block
-    rel = leaf_cells_abs - base_cell * (8 ** lloc)
-    n_leaf = c_per * 8 ** lloc
+    rel = leaf_cells_abs - base_cell * 8 ** cfg.local_levels
     rel = jnp.clip(rel, 0, n_leaf - 1)
-
-    counts = [jnp.zeros((n_leaf,), jnp.float32).at[rel].add(weights)]
-    centroids = [jnp.zeros((n_leaf, 3), jnp.float32).at[rel].add(
-        positions * weights[:, None])]
-    for _ in range(lloc):
-        counts.insert(0, counts[0].reshape(-1, 8).sum(1))
-        centroids.insert(0, centroids[0].reshape(-1, 8, 3).sum(1))
-
-    # leaf membership table (cap M per leaf; overflow dropped this round)
-    m = members_cap
     slot = positions_within(rel, n_leaf)
-    ok = slot < m
-    tbl = jnp.full((n_leaf, m), -1, jnp.int32)
-    tbl = tbl.at[rel, jnp.where(ok, slot, m)].set(
-        jnp.arange(positions.shape[0], dtype=jnp.int32), mode="drop")
-    return LocalTree(tuple(counts), tuple(centroids), tbl,
-                     jnp.asarray(base_cell, jnp.int32))
+    return _assemble_tree(positions, weights, rel, slot, cfg, n_leaf,
+                          base_cell, members_cap)
+
+
+@registry.register_phase("tree", "fused")
+def build_local_tree_fused(positions, weights, rank, cfg, num_ranks: int,
+                           members_cap: int = 4, interpret=None) -> LocalTree:
+    """Same build with (rel, slot) from the Pallas Morton radix-sort kernel
+    — encode, sort, and rank state never leave VMEM."""
+    from repro.kernels import ops as kops  # lazy: kernels import us
+    leaf_level, n_leaf, base_cell = _tree_geometry(rank, cfg, num_ranks)
+    rel, slot = kops.morton_sort(
+        positions, jnp.asarray(base_cell, jnp.int32) * 8 ** cfg.local_levels,
+        leaf_level=leaf_level, n_leaf=n_leaf, interpret=interpret)
+    return _assemble_tree(positions, weights, rel, slot, cfg, n_leaf,
+                          base_cell, members_cap)
+
+
+def build_tree(cfg, positions, weights, rank, num_ranks: int,
+               members_cap: int = 4) -> LocalTree:
+    """Registry dispatch on ``cfg.tree_impl`` ('reference' | 'fused')."""
+    build = registry.resolve("tree", cfg.tree_impl)
+    return build(positions, weights, rank, cfg, num_ranks, members_cap)
 
 
 def build_top_tree(branch_counts, branch_centroids, num_ranks: int) -> TopTree:

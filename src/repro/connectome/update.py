@@ -165,26 +165,29 @@ def connectivity_update(state, ctx):
         stats = stats.count("synapses_deleted",
                             jnp.sum(kill_out) + jnp.sum(kill_in))
 
-        # notify partners; kill masks index the PRE-retraction tables
+        # notify partners; kill masks index the PRE-retraction tables.
+        # Routing + table mutation dispatch through the "apply" registry
+        # domain ('fused' = the VMEM-resident kernels, bit-identical)
+        apply_impl = registry.resolve("apply", cfg.apply_impl)
         lesions = proto.has_lesions(ctx.scenario)
-        msgs_out, ovf_out = routing.route_deletions(
+        msgs_out, ovf_out = apply_impl.route(
             kill_out, state.out_edges, gids[:, None], cfg, axis_name,
             num_ranks, lesions)
-        msgs_in, ovf_in = routing.route_deletions(
+        msgs_in, ovf_in = apply_impl.route(
             kill_in, state.in_edges, gids[:, None], cfg, axis_name, num_ranks,
             lesions)
         # dropped notifications leave stale partner edges — surface them
         stats = stats.count("request_overflow", ovf_out + ovf_in)
         # apply: partner of my out-edge removes its in-edge, and vice versa
-        in_edges = syn.remove_edges_by_messages(
+        # (each table drains its messages and re-compacts in one stage)
+        in_edges = apply_impl.deletion(
             in_edges, jnp.clip(msgs_out[:, 0] - gid0, 0, n - 1),
             msgs_out[:, 1],
             (msgs_out[:, 0] >= gid0) & (msgs_out[:, 0] < gid0 + n))
-        out_edges = syn.remove_edges_by_messages(
+        out_edges = apply_impl.deletion(
             out_edges, jnp.clip(msgs_in[:, 0] - gid0, 0, n - 1),
             msgs_in[:, 1],
             (msgs_in[:, 0] >= gid0) & (msgs_in[:, 0] < gid0 + n))
-        out_edges, in_edges = syn.compact(out_edges), syn.compact(in_edges)
 
     # ---- formation (phase 3b) --------------------------------------------
     out_cnt, in_cnt = syn.counts(out_edges), syn.counts(in_edges)
@@ -193,8 +196,10 @@ def connectivity_update(state, ctx):
     vac_d_pos = jnp.maximum(vac_d, 0.0)
 
     with jax.named_scope("repro.conn.tree_build"):
-        local_tree = ctree.build_local_tree(state.positions, vac_d_pos, rank,
-                                            cfg, num_ranks)
+        # registry domain "tree": 'reference' (jnp Morton sort) | 'fused'
+        # (Pallas radix-sort kernel), bit-identical builds
+        local_tree = ctree.build_tree(cfg, state.positions, vac_d_pos, rank,
+                                      num_ranks)
         top = ctree.exchange_branch_nodes(local_tree, axis_name, num_ranks)
         stats = ctx.metrics.tree_built(stats, local_tree)
 

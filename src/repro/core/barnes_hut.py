@@ -1,13 +1,9 @@
 """Compat shim — the Barnes-Hut search moved to ``repro.connectome.traverse``
 (PR 3: the connectome subsystem owns the whole connectivity update; the
 randomness contract changed from fold_in key chains to the counter-based
-Threefry hash keyed by (seed, chunk, source_gid, round, draw)). This module
-re-exports the public surface so existing imports keep working."""
-from repro.connectome.traverse import (NEG, StackedTree, _gauss, bh_search,
-                                       expand_and_sample, pairwise_d2,
-                                       phase_a, phase_b, phase_b_core,
-                                       select_member, stack_levels)
+Threefry hash keyed by (seed, chunk, source_gid, round, draw)). Pruned to
+the names still imported (tests/test_brain.py, tests/test_kernels.py) —
+new code imports ``repro.connectome.traverse`` directly."""
+from repro.connectome.traverse import _gauss, bh_search, stack_levels
 
-__all__ = ["NEG", "StackedTree", "bh_search", "expand_and_sample",
-           "pairwise_d2", "phase_a", "phase_b", "phase_b_core",
-           "select_member", "stack_levels"]
+__all__ = ["bh_search", "stack_levels"]

@@ -1,21 +1,12 @@
 """Compat shim — the connectivity update moved to ``repro.connectome`` (PR 3):
 synapse-table ops in ``connectome.synapses``, the phase-A/B search in
 ``connectome.traverse``, request routing in ``connectome.routing``, and the
-per-chunk orchestration in ``connectome.update``. This module re-exports the
-public surface so existing imports keep working."""
-from repro.connectome.routing import (cap_deletions, cap_requests,
-                                      formation_new, formation_old,
-                                      route_deletions)
-from repro.connectome.synapses import (SynapseTable, accept_requests,
-                                       add_out_edges, compact, counts,
-                                       edge_priority, init_synapses,
+per-chunk orchestration in ``connectome.update``. Pruned to the names still
+imported (tests/test_brain.py) — new code imports the ``repro.connectome``
+modules directly."""
+from repro.connectome.synapses import (accept_requests, compact,
                                        remove_edges_by_messages,
                                        retract_synapses)
-from repro.connectome.traverse import phase_a, phase_b, phase_b_core
 
-__all__ = ["SynapseTable", "accept_requests", "add_out_edges",
-           "cap_deletions", "cap_requests", "compact", "counts",
-           "edge_priority", "formation_new", "formation_old",
-           "init_synapses", "phase_a", "phase_b", "phase_b_core",
-           "remove_edges_by_messages", "retract_synapses",
-           "route_deletions"]
+__all__ = ["accept_requests", "compact", "remove_edges_by_messages",
+           "retract_synapses"]

@@ -1,9 +1,8 @@
 """Compat shim — the level-array octree moved to ``repro.connectome.tree``
-(PR 3: the connectome subsystem owns the whole connectivity update). This
-module re-exports the public surface so existing imports keep working."""
-from repro.connectome.tree import (LocalTree, TopTree, build_local_tree,
-                                   build_top_tree, exchange_branch_nodes,
-                                   node_center, positions_within)
+(PR 3: the connectome subsystem owns the whole connectivity update). Pruned
+to the name still imported (tests/test_brain.py) — new code imports
+``repro.connectome.tree`` directly (``build_tree`` dispatches on
+``BrainConfig.tree_impl``)."""
+from repro.connectome.tree import build_local_tree
 
-__all__ = ["LocalTree", "TopTree", "build_local_tree", "build_top_tree",
-           "exchange_branch_nodes", "node_center", "positions_within"]
+__all__ = ["build_local_tree"]

@@ -16,6 +16,10 @@ from repro.kernels.bh_gauss import bh_gauss_probs
 from repro.kernels.bh_traverse import bh_traverse as bh_traverse_kernel
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.neuron_step import neuron_step
+from repro.kernels.radix_sort import morton_sort as morton_sort_kernel
+from repro.kernels.radix_sort import radix_argsort as radix_argsort_kernel
+from repro.kernels.synapse_apply import route_build as route_build_kernel
+from repro.kernels.synapse_apply import synapse_apply as synapse_apply_kernel
 
 
 def _interpret_default() -> bool:
@@ -59,6 +63,50 @@ def bh_traverse(counts, cents, members, npos, vac, x, start_cell, src_gid,
                               seed=seed, sizes=sizes, theta=theta,
                               sigma=sigma, frontier=frontier,
                               n_levels=n_levels, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("key_bits", "interpret"))
+def radix_argsort(keys, *, key_bits: int = 30, interpret=None):
+    """Stable radix argsort of non-negative int32 keys — returns
+    (sorted_keys, order), bit-identical to ``jnp.argsort(stable=True)``
+    (kernels/radix_sort.py). The reusable sort primitive."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return radix_argsort_kernel(keys, key_bits=key_bits, interpret=interpret)
+
+
+def morton_sort(positions, leaf_base, *, leaf_level: int, n_leaf: int,
+                interpret=None):
+    """Fused Morton encode + radix sort feeding the on-device tree build
+    (kernels/radix_sort.py). Not jitted here: it runs inside the engine's
+    jitted shard_map."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return morton_sort_kernel(positions, leaf_base, leaf_level=leaf_level,
+                              n_leaf=n_leaf, interpret=interpret)
+
+
+def synapse_apply(edges, msg_lid, msg_gid, msg_valid, req_lid, req_src,
+                  req_valid, req_prio, vacant_d, *, interpret=None):
+    """Fused remove -> compact -> accept pass over one edge table
+    (kernels/synapse_apply.py). Not jitted here: it runs inside the
+    engine's jitted shard_map."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return synapse_apply_kernel(edges, msg_lid, msg_gid, msg_valid, req_lid,
+                                req_src, req_valid, req_prio, vacant_d,
+                                interpret=interpret)
+
+
+def route_build(flat_other, flat_mine, *, n: int, num_ranks: int, cap: int,
+                interpret=None):
+    """Fused deletion-routing buffer build (kernels/synapse_apply.py). Not
+    jitted here: it runs inside the engine's jitted shard_map."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return route_build_kernel(flat_other, flat_mine, n=n,
+                              num_ranks=num_ranks, cap=cap,
+                              interpret=interpret)
 
 
 def fused_activity_window(state, in_edges, w_table, rates, bg_mean, bg_std,

@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: stable LSD radix argsort over non-negative int32 keys,
+plus the fused Morton-sort entry point that feeds the on-device octree build.
+
+The reference tree build (``connectome/tree.py``) is "host-shaped": it runs
+``jnp.argsort(stable=True)`` + ``searchsorted`` + a full-length rank scatter
+per update, and on CPU XLA the 32K-element scatters serialize into
+per-element while loops that the trip-count-aware roofline prices at
+gigabytes. This kernel keeps the whole sort VMEM-resident: per 8-bit digit
+it builds a 256-bucket histogram (scatter-add), turns it into bucket starts
+(exclusive cumsum — the integer equivalent of ``searchsorted`` over a dense
+key range), and derives each element's stable within-bucket rank with a
+cumsum per bucket. Ranks are *defined* identically to
+``jnp.argsort(stable=True)`` — position = #{smaller keys} + #{equal keys
+earlier in buffer order} — and every quantity is integer arithmetic, so
+``radix_argsort`` is bit-identical to the stable argsort (asserted on
+adversarial inputs in tests/test_radix_sort.py), which makes the fused tree
+build bit-identical to the reference.
+
+``morton_sort`` composes the Morton encode (``core/morton.py``) with one
+radix sort over the relative leaf cells and returns (rel, slot): exactly the
+(``rel``, ``positions_within(rel, n_leaf)``) pair the reference build
+computes, without any sort/scatter leaving the kernel. Like the other
+kernels here, CPU containers run it with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import morton
+
+DIGIT_BITS = 8
+
+
+def bucket_ranks(keys, num_buckets: int):
+    """Stable rank of each element WITHIN its bucket — #{j < i: keys[j] ==
+    keys[i]}, exactly ``tree.positions_within`` — via one masked cumsum per
+    bucket: O(B*n) VPU work, O(n) memory, no sort and no full-length
+    scatter. ``keys`` must lie in [0, num_buckets)."""
+    n = keys.shape[0]
+
+    def body(b, within):
+        eq = keys == b
+        return jnp.where(eq, jnp.cumsum(eq.astype(jnp.int32)) - 1, within)
+
+    return jax.lax.fori_loop(0, num_buckets, body,
+                             jnp.zeros((n,), jnp.int32))
+
+
+def stable_ranks(keys, num_buckets: int):
+    """Stable GLOBAL rank of each element under an ascending bucket sort:
+    ``rank[i] = #{j: keys[j] < keys[i]} + #{j < i: keys[j] == keys[i]}`` —
+    the position ``jnp.argsort(keys, stable=True)`` assigns. Histogram
+    (scatter-add) + exclusive cumsum for the bucket starts (the integer
+    equivalent of ``searchsorted``), plus the within-bucket ranks. Shared
+    by the kernel bodies and usable as a plain jnp op."""
+    hist = jnp.zeros((num_buckets,), jnp.int32).at[keys].add(jnp.int32(1))
+    start = jnp.cumsum(hist) - hist
+    return start[keys] + bucket_ranks(keys, num_buckets)
+
+
+def radix_ranks(keys, key_bits: int):
+    """Stable ascending sort rank of each element of ``keys`` (non-negative
+    int32, < 2**key_bits): LSD radix — one ``stable_ranks`` pass per 8-bit
+    digit, permuting (key, original-index) pairs between passes. Stability
+    of every pass makes the composition stable, so the result equals the
+    inverse permutation of ``jnp.argsort(keys, stable=True)``."""
+    n = keys.shape[0]
+    k = keys.astype(jnp.int32)
+    idx = jnp.arange(n, dtype=jnp.int32)
+    for shift in range(0, max(key_bits, 1), DIGIT_BITS):
+        digit = (k >> shift) & ((1 << DIGIT_BITS) - 1)
+        r = stable_ranks(digit, 1 << DIGIT_BITS)
+        k = jnp.zeros_like(k).at[r].set(k)
+        idx = jnp.zeros_like(idx).at[r].set(idx)
+    # idx[r] = original position of sort rank r; invert to rank-per-element
+    return jnp.zeros_like(idx).at[idx].set(jnp.arange(n, dtype=jnp.int32))
+
+
+def _argsort_kernel(keys_ref, sorted_ref, order_ref, *, key_bits):
+    keys = keys_ref[...]
+    n = keys.shape[0]
+    rank = radix_ranks(keys, key_bits)
+    sorted_ref[...] = jnp.zeros_like(keys).at[rank].set(keys)
+    order_ref[...] = jnp.zeros((n,), jnp.int32).at[rank].set(
+        jnp.arange(n, dtype=jnp.int32))
+
+
+def radix_argsort(keys, *, key_bits: int = 30, interpret: bool = False):
+    """Stable ascending argsort of (n,) non-negative int32 ``keys`` in one
+    VMEM-resident pass. Returns ``(sorted_keys, order)`` with ``order``
+    bit-identical to ``jnp.argsort(keys, stable=True)``. ``key_bits`` bounds
+    the key range (30 covers Morton codes at ``morton.MAX_LEVEL``)."""
+    n = keys.shape[0]
+    full = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_argsort_kernel, key_bits=key_bits),
+        grid=(1,),
+        in_specs=[full],
+        out_specs=[full, full],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(keys.astype(jnp.int32))
+
+
+def _morton_sort_kernel(pos_ref, base_ref, rel_ref, slot_ref, *, leaf_level,
+                        n_leaf, key_bits):
+    rel = morton.morton_encode(pos_ref[...], leaf_level) - base_ref[0]
+    rel = jnp.clip(rel, 0, n_leaf - 1)
+    rank = radix_ranks(rel, key_bits)
+    hist = jnp.zeros((n_leaf,), jnp.int32).at[rel].add(jnp.int32(1))
+    first = jnp.cumsum(hist) - hist
+    rel_ref[...] = rel
+    # global stable sort rank minus the cell's first rank = within-cell rank
+    slot_ref[...] = rank - first[rel]
+
+
+def morton_sort(positions, leaf_base, *, leaf_level: int, n_leaf: int,
+                interpret: bool = False):
+    """Morton-encode (n, 3) positions at ``leaf_level``, rebase to the
+    rank's block (``leaf_base`` = base_cell * 8**local_levels, traced scalar
+    ok), and radix-sort the relative cells on-device. Returns ``(rel,
+    slot)`` — bit-identical to the reference path ``rel = clip(encode -
+    leaf_base); slot = positions_within(rel, n_leaf)``."""
+    n = positions.shape[0]
+    key_bits = max((n_leaf - 1).bit_length(), 1)
+    base = jnp.reshape(jnp.asarray(leaf_base, jnp.int32), (1,))
+    kern = functools.partial(_morton_sort_kernel, leaf_level=leaf_level,
+                             n_leaf=n_leaf, key_bits=key_bits)
+    row = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((n, 3), lambda i: (0, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[row, row],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(positions, base)
+
+
+def radix_sort_hbm_bytes(n: int) -> int:
+    """Analytic HBM traffic of one fused ``radix_argsort`` on TPU: keys
+    stream in once, (sorted, order) stream out once — histograms, bucket
+    starts, and the per-pass permutations never leave VMEM."""
+    return n * 4 + 2 * n * 4
+
+
+def morton_sort_hbm_bytes(n: int) -> int:
+    """Analytic HBM traffic of one fused ``morton_sort`` on TPU: positions
+    + the base scalar in once, (rel, slot) out once."""
+    return n * 3 * 4 + 4 + 2 * n * 4

@@ -1,0 +1,121 @@
+"""Pallas TPU kernels: the fused synapse-table apply and the deletion-routing
+buffer build (registry domain "apply", ``BrainConfig.apply_impl='fused'``).
+
+The reference apply is three jnp passes over the (n, s_max) edge table —
+``remove_edges_by_messages`` (a lexsort over n*s_max + q items plus a
+full-length kill scatter), ``compact``, and ``accept_requests`` (another
+sort + rank scatter) — and the deletion routing adds one more
+``positions_within`` + scatter over all n*s_max flattened edges. On CPU XLA
+each of those 32K-element scatters serializes into a per-element while loop
+that the trip-count-aware roofline prices at ~4.3 GB *per scatter* at
+n=1024 (benchmarks/bench_connectivity.py); on TPU they are real HBM
+round-trips of the whole table between stages.
+
+``synapse_apply`` runs the SAME shared cores (``remove_edges_by_messages``
+-> ``compact`` -> ``accept_core``) in one ``pallas_call`` with the table,
+messages, and requests VMEM-resident — the table crosses HBM once in, once
+out. Either stage can be disabled by passing no valid messages/requests
+(the cores are then exact identities on a compacted table), which is how
+``apply_impl='fused'`` maps the two call sites in ``connectome/update.py``
+and ``connectome/routing.py`` onto one kernel. ``route_build`` runs
+``routing.route_build_core`` with the per-bucket cumsum ``bucket_ranks``
+standing in for ``positions_within`` (integer-identical stable ranks). Float priorities
+are computed OUTSIDE the kernels by the same expressions the reference
+uses, so both impls are bit-identical (tests/test_radix_sort.py,
+tests/test_connectome.py, tests/test_multidevice.py). Like the other
+kernels here, CPU containers run them with ``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.connectome import routing
+from repro.connectome import synapses as syn
+from repro.kernels.radix_sort import bucket_ranks
+
+
+def _apply_kernel(edges_ref, mlid_ref, mgid_ref, mvalid_ref, rlid_ref,
+                  rsrc_ref, rvalid_ref, rprio_ref, vac_ref, out_ref, acc_ref):
+    edges = syn.remove_edges_by_messages(edges_ref[...], mlid_ref[...],
+                                         mgid_ref[...], mvalid_ref[...])
+    edges = syn.compact(edges)
+    accept, edges = syn.accept_core(rlid_ref[...], rsrc_ref[...],
+                                    rvalid_ref[...], vac_ref[...], edges,
+                                    rprio_ref[...])
+    out_ref[...] = edges
+    acc_ref[...] = accept
+
+
+def synapse_apply(edges, msg_lid, msg_gid, msg_valid, req_lid, req_src,
+                  req_valid, req_prio, vacant_d, *, interpret: bool = False):
+    """One VMEM-resident remove -> compact -> accept pass over one edge
+    table. edges: (n, s_max) i32; msg_*: (qm,) deletion messages; req_*:
+    (qr,) formation requests with precomputed priorities; vacant_d: (n,)
+    f32. Returns (new_edges, accept (qr,) bool)."""
+    n, s_max = edges.shape
+    qm, qr = msg_lid.shape[0], req_lid.shape[0]
+    full1 = lambda m: pl.BlockSpec((m,), lambda i: (0,))      # noqa: E731
+    tbl = pl.BlockSpec((n, s_max), lambda i: (0, 0))
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=(1,),
+        in_specs=[tbl, full1(qm), full1(qm), full1(qm),
+                  full1(qr), full1(qr), full1(qr), full1(qr), full1(n)],
+        out_specs=[tbl, full1(qr)],
+        out_shape=[jax.ShapeDtypeStruct((n, s_max), jnp.int32),
+                   jax.ShapeDtypeStruct((qr,), jnp.bool_)],
+        interpret=interpret,
+    )(edges, msg_lid.astype(jnp.int32), msg_gid.astype(jnp.int32), msg_valid,
+      req_lid.astype(jnp.int32), req_src.astype(jnp.int32), req_valid,
+      req_prio, vacant_d)
+
+
+def _route_kernel(other_ref, mine_ref, buf_ref, drop_ref, *, n, num_ranks,
+                  cap):
+    buf, dropped = routing.route_build_core(
+        other_ref[...], mine_ref[...], n, num_ranks, cap,
+        lambda ids, buckets: bucket_ranks(ids, buckets))
+    buf_ref[...] = buf
+    drop_ref[...] = dropped[None]
+
+
+def route_build(flat_other, flat_mine, *, n: int, num_ranks: int, cap: int,
+                interpret: bool = False):
+    """Deletion-notification buffer build over the flattened (n*s_max,)
+    (partner gid, my gid) pairs, VMEM-resident. Returns (buf (num_ranks,
+    cap, 2) i32, dropped (1,) f32) — bit-identical to the pre-collective
+    half of ``routing.route_deletions``."""
+    m = flat_other.shape[0]
+    kern = functools.partial(_route_kernel, n=n, num_ranks=num_ranks, cap=cap)
+    row = pl.BlockSpec((m,), lambda i: (0,))
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[row, row],
+        out_specs=[pl.BlockSpec((num_ranks, cap, 2), lambda i: (0, 0, 0)),
+                   pl.BlockSpec((1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((num_ranks, cap, 2), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)],
+        interpret=interpret,
+    )(flat_other.astype(jnp.int32), flat_mine.astype(jnp.int32))
+
+
+def apply_hbm_bytes(n: int, s_max: int, qm: int, qr: int) -> int:
+    """Analytic HBM traffic of one fused ``synapse_apply`` on TPU: the table
+    in and out once, messages/requests/vacancies in once, the accept mask
+    out once — every inter-stage table state stays in VMEM."""
+    table = 2 * n * s_max * 4
+    msgs = qm * (4 + 4 + 1)
+    reqs = qr * (4 + 4 + 1 + 4) + qr
+    return table + msgs + reqs + n * 4
+
+
+def route_build_hbm_bytes(n: int, s_max: int, num_ranks: int,
+                          cap: int) -> int:
+    """Analytic HBM traffic of one fused ``route_build`` on TPU: the two
+    flattened gid streams in once, the buffer + drop count out once."""
+    return 2 * n * s_max * 4 + num_ranks * cap * 2 * 4 + 4

@@ -1,4 +1,4 @@
-"""Phase-implementation registry: the five variant fields of ``BrainConfig``
+"""Phase-implementation registry: the variant fields of ``BrainConfig``
 resolve to callables here, at build time, instead of being string-compared
 mid-trace in three different modules.
 
@@ -17,6 +17,11 @@ Each *domain* is one variant axis of the paper's three-phase loop; each
                                        (Pallas traversal) [connectome/traverse]
   rate_exchange   rate_exchange        dense ((R, n) all-gather) | sparse
                                        (subscription push) [connectome/update]
+  tree            tree_impl            reference (jnp Morton sort) | fused
+                                       (Pallas radix sort) [connectome/tree]
+  apply           apply_impl           reference (jnp segment ranks) | fused
+                                       (Pallas edge-table kernel)
+                                                      [connectome/synapses]
 
 ``_DOMAINS`` is the single source of truth for the *allowed names*: it is
 plain data, so ``BrainConfig.__post_init__`` can validate eagerly (at
@@ -40,6 +45,8 @@ _DOMAINS: Dict[str, Tuple[str, ...]] = {
     "connectivity": ("old", "new"),
     "traversal": ("reference", "fused"),
     "rate_exchange": ("dense", "sparse"),
+    "tree": ("reference", "fused"),
+    "apply": ("reference", "fused"),
 }
 
 # domain -> the BrainConfig field it is selected by (also used in errors, so
@@ -50,6 +57,8 @@ CONFIG_FIELDS: Dict[str, str] = {
     "connectivity": "connectivity_alg",
     "traversal": "connectivity_impl",
     "rate_exchange": "rate_exchange",
+    "tree": "tree_impl",
+    "apply": "apply_impl",
 }
 
 _IMPLS: Dict[Tuple[str, str], Callable] = {}
@@ -83,7 +92,7 @@ def _bad_value(domain: str, name) -> ValueError:
 
 
 def check_config(cfg) -> None:
-    """Eager validation of all five variant fields plus cross-field
+    """Eager validation of all variant fields plus cross-field
     compatibility. Called from ``BrainConfig.__post_init__`` so an illegal
     config can never reach a trace. Pure data lookup — no heavy imports."""
     for domain, field in CONFIG_FIELDS.items():

@@ -171,11 +171,58 @@ def test_bh_traverse_prng_is_location_independent():
 
 def test_connectivity_impl_validation():
     # unknown variant names fail eagerly at config construction
+    base = BrainConfig(neurons_per_rank=16, local_levels=2, frontier_cap=32,
+                       max_synapses=4)
     with pytest.raises(ValueError, match="connectivity_impl"):
-        dataclasses.replace(BrainConfig(neurons_per_rank=16,
-                                        local_levels=2, frontier_cap=32,
-                                        max_synapses=4),
-                            connectivity_impl="bogus")
+        dataclasses.replace(base, connectivity_impl="bogus")
+    with pytest.raises(ValueError, match="tree_impl"):
+        dataclasses.replace(base, tree_impl="bogus")
+    with pytest.raises(ValueError, match="apply_impl"):
+        dataclasses.replace(base, apply_impl="bogus")
+
+
+# ---------------------------------------------------------------- retract
+def _retract_argsort_oracle(key, edges, n_delete, row_gids):
+    """The pre-PR full per-row stable argsort over priorities — the oracle
+    the masked top-k rank-by-counting must match bit-for-bit."""
+    n, s_max = edges.shape
+    occupied = edges >= 0
+    flat_prio = synapses.edge_priority(
+        key, jnp.broadcast_to(row_gids[:, None], edges.shape).reshape(-1),
+        jnp.where(occupied, edges, 0).reshape(-1))
+    prio = jnp.where(occupied, flat_prio.reshape(edges.shape), 2.0)
+    order = jnp.argsort(prio, axis=1, stable=True)
+    ranks = jnp.zeros_like(edges).at[
+        jnp.arange(n)[:, None], order].set(jnp.arange(s_max)[None, :])
+    kill = occupied & (ranks < n_delete[:, None])
+    return jnp.where(kill, -1, edges), kill
+
+
+def _check_retract_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    n, s_max = 24, 8
+    edges = jnp.asarray(rng.integers(-1, 30, (n, s_max)), jnp.int32)
+    # n_delete beyond occupancy and zero both occur
+    nd = jnp.asarray(rng.integers(0, s_max + 2, n), jnp.int32)
+    gids = jnp.asarray(rng.integers(0, 200, n), jnp.int32)
+    key = jax.random.key(seed % 2**31)
+    got_e, got_k = synapses.retract_synapses(key, edges, nd, gids)
+    want_e, want_k = _retract_argsort_oracle(key, edges, nd, gids)
+    np.testing.assert_array_equal(np.asarray(got_e), np.asarray(want_e))
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(want_k))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_retract_topk_matches_argsort_oracle(seed):
+    """The masked top-k-by-priority retraction == the full per-row argsort
+    it replaced, bit-for-bit (same Threefry priority stream)."""
+    _check_retract_matches_oracle(seed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_retract_topk_matches_argsort_oracle_random(seed):
+    _check_retract_matches_oracle(seed)
 
 
 # ---------------------------------------------------------------- engine
@@ -218,6 +265,60 @@ def test_engine_fused_connectivity_equals_reference():
                                       err_msg=f)
     assert float(a.stats["synapses_formed"].sum()) > 0
     assert float(a.stats["formation_requests"].sum()) > 0  # tracked on 'new'
+
+
+def test_engine_fused_tree_apply_equals_reference():
+    """tree_impl='fused' + apply_impl='fused' (the radix-sort tree build and
+    the VMEM-resident synapse-apply kernels) commit bit-identical edge
+    tables AND neuron state through the full jitted sim at a single rank —
+    the acceptance contract of the whole-chunk-residency PR. The lesion
+    scenario drives BOTH stages of the kernel live (formation and
+    deletion)."""
+    scn = _scaled(library.get_scenario("lesion_rewiring"))
+    mesh = engine.make_brain_mesh()
+    res = {}
+    for impl in ("reference", "fused"):
+        cfg = dataclasses.replace(SMALL, tree_impl=impl, apply_impl=impl)
+        init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scn)
+        st = init_fn()
+        for _ in range(3):
+            st = chunk(st)
+        res[impl] = st
+    a, b = res["reference"], res["fused"]
+    np.testing.assert_array_equal(np.asarray(a.out_edges),
+                                  np.asarray(b.out_edges))
+    np.testing.assert_array_equal(np.asarray(a.in_edges),
+                                  np.asarray(b.in_edges))
+    for f in ("v", "calcium", "ax_elements", "de_elements", "rate"):
+        np.testing.assert_array_equal(np.asarray(getattr(a.neurons, f)),
+                                      np.asarray(getattr(b.neurons, f)),
+                                      err_msg=f)
+    assert float(a.stats["synapses_formed"].sum()) > 0
+    assert float(a.stats["synapses_deleted"].sum()) > 0
+
+
+@pytest.mark.parametrize("name", sorted(library.SCENARIOS))
+def test_fused_tree_apply_old_new_identical(name):
+    """THE paper invariant under the new kernels: with fused tree build and
+    fused apply, both connectivity algorithms still commit bit-identical
+    edge tables, for every library scenario (lesion protocols exercise the
+    big-cap deletion routing path through the route_build kernel)."""
+    scn = _scaled(library.get_scenario(name))
+    mesh = engine.make_brain_mesh()
+    res = {}
+    for alg in ("old", "new"):
+        cfg = dataclasses.replace(SMALL, tree_impl="fused",
+                                  apply_impl="fused", connectivity_alg=alg)
+        init_fn, chunk = engine.build_sim(cfg, mesh, scenario=scn)
+        st = init_fn()
+        for _ in range(3):
+            st = chunk(st)
+        res[alg] = (np.sort(np.asarray(st.out_edges), 1),
+                    np.sort(np.asarray(st.in_edges), 1),
+                    float(st.stats["synapses_formed"].sum()))
+    assert res["old"][2] == res["new"][2] > 0
+    np.testing.assert_array_equal(res["old"][0], res["new"][0])
+    np.testing.assert_array_equal(res["old"][1], res["new"][1])
 
 
 @pytest.mark.parametrize("name", sorted(library.SCENARIOS))

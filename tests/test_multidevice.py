@@ -308,6 +308,105 @@ def test_fused_connectivity_identical_across_ranks():
     assert "KERNEL==REF" in out
 
 
+def test_fused_tree_apply_identical_across_ranks():
+    """The radix-sort tree build + fused synapse-apply kernels == the jnp
+    reference bit-for-bit on a real 4-rank mesh, under a lesion scenario so
+    the deletion-routing buffer (route_build kernel) actually crosses the
+    all-to-all with live messages."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.core import engine
+        from repro.scenarios import Lesion, Recover, Stimulate, library
+        base = BrainConfig(neurons_per_rank=32, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=25,
+                           requests_cap_factor=1000)
+        def scaled(scn, div=20):
+            evs = []
+            for e in scn.events:
+                if isinstance(e, Stimulate):
+                    evs.append(dataclasses.replace(
+                        e, t0=e.t0 // div,
+                        t1=max(e.t1 // div, e.t0 // div + 10)))
+                elif isinstance(e, (Lesion, Recover)):
+                    evs.append(dataclasses.replace(e, t=e.t // div))
+            return dataclasses.replace(scn, events=tuple(evs))
+        scn = scaled(library.get_scenario('lesion_rewiring'))
+        res = {}
+        for impl in ['reference', 'fused']:
+            cfg = dataclasses.replace(base, tree_impl=impl, apply_impl=impl)
+            init_fn, chunk = engine.build_sim(cfg, engine.make_brain_mesh(),
+                                              scenario=scn)
+            st = init_fn()
+            for _ in range(3):
+                st = chunk(st)
+            res[impl] = st
+        a, b = res['reference'], res['fused']
+        assert np.array_equal(np.asarray(a.out_edges),
+                              np.asarray(b.out_edges)), 'out differs'
+        assert np.array_equal(np.asarray(a.in_edges),
+                              np.asarray(b.in_edges)), 'in differs'
+        for f in ('v', 'calcium', 'rate'):
+            assert np.array_equal(np.asarray(getattr(a.neurons, f)),
+                                  np.asarray(getattr(b.neurons, f))), f
+        formed = float(a.stats['synapses_formed'].sum())
+        deleted = float(a.stats['synapses_deleted'].sum())
+        assert formed > 0 and deleted > 0, (formed, deleted)
+        print('TREEAPPLY==REF', formed, deleted)
+    """, devices=4)
+    assert "TREEAPPLY==REF" in out
+
+
+def test_fused_tree_apply_old_new_scenarios_across_ranks():
+    """The paper's old==new invariant survives the fused tree/apply kernels
+    on a 4-rank mesh for every library scenario x dense/sparse rate
+    exchange — the acceptance matrix of the whole-chunk-residency PR."""
+    out = run_py("""
+        import dataclasses
+        import jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.core import engine
+        from repro.scenarios import Lesion, Recover, Stimulate, library
+        base = BrainConfig(neurons_per_rank=32, local_levels=3,
+                           frontier_cap=32, max_synapses=8, rate_period=25,
+                           requests_cap_factor=1000, subs_cap_factor=1000,
+                           tree_impl='fused', apply_impl='fused')
+        def scaled(scn, div=20):
+            evs = []
+            for e in scn.events:
+                if isinstance(e, Stimulate):
+                    evs.append(dataclasses.replace(
+                        e, t0=e.t0 // div,
+                        t1=max(e.t1 // div, e.t0 // div + 10)))
+                elif isinstance(e, (Lesion, Recover)):
+                    evs.append(dataclasses.replace(e, t=e.t // div))
+            return dataclasses.replace(scn, events=tuple(evs))
+        for name in sorted(library.SCENARIOS):
+            scn = scaled(library.get_scenario(name))
+            for rex in ['dense', 'sparse']:
+                res = {}
+                for alg in ['old', 'new']:
+                    cfg = dataclasses.replace(base, rate_exchange=rex,
+                                              connectivity_alg=alg)
+                    init_fn, chunk = engine.build_sim(
+                        cfg, engine.make_brain_mesh(), scenario=scn)
+                    st = init_fn()
+                    for _ in range(2):
+                        st = chunk(st)
+                    res[alg] = (np.sort(np.asarray(st.out_edges), 1),
+                                np.sort(np.asarray(st.in_edges), 1),
+                                float(st.stats['synapses_formed'].sum()))
+                assert res['old'][2] == res['new'][2] > 0, (name, rex)
+                assert np.array_equal(res['old'][0], res['new'][0]), \\
+                    (name, rex, 'out')
+                assert np.array_equal(res['old'][1], res['new'][1]), \\
+                    (name, rex, 'in')
+        print('OLD==NEW FUSED TREEAPPLY')
+    """, devices=4)
+    assert "OLD==NEW FUSED TREEAPPLY" in out
+
+
 def test_spike_vs_rate_statistics():
     """New spike algorithm preserves mean activity (paper Fig 8/9)."""
     out = run_py("""

@@ -58,11 +58,15 @@ def test_registry_resolve_unknown_name_lists_allowed():
 
 
 def test_registry_all_declared_names_registered():
-    """Every declared (domain, name) pair has a registered callable."""
+    """Every declared (domain, name) pair resolves to a callable — or, for
+    domains whose implementation is a bundle (e.g. ``apply`` ->
+    ``ApplyImpl``), to a NamedTuple whose fields are all callable."""
     registry.ensure_loaded()
     for domain in registry.CONFIG_FIELDS:
         for name in registry.allowed(domain):
-            assert callable(registry.resolve(domain, name)), (domain, name)
+            impl = registry.resolve(domain, name)
+            parts = tuple(impl) if isinstance(impl, tuple) else (impl,)
+            assert parts and all(callable(p) for p in parts), (domain, name)
 
 
 def test_register_phase_refuses_undeclared_name():
