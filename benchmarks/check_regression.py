@@ -47,6 +47,7 @@ BENCHES = {
     "spikes": ("benchmarks.bench_fig4_spikes", "BENCH_spikes.json"),
     "fig11": ("benchmarks.bench_fig11_total", "BENCH_fig11.json"),
     "runner": ("benchmarks.bench_runner", "BENCH_runner.json"),
+    "service": ("benchmarks.bench_service", "BENCH_service.json"),
 }
 
 
@@ -83,6 +84,10 @@ RULES = (
     # fault-tolerance overhead: checkpoint save/restore/probe wall time
     # per interval — host I/O dominated, very noisy on shared CI
     Rule("*_ms_per_ckpt", False, 3.0, True),
+    # multi-tenant service (bench_service): throughput and the
+    # per-tenant co-tenancy overhead factor — wall-time based, generous
+    Rule("requests_per_s", True, 0.5, True),
+    Rule("isolation_overhead_x", False, 1.0, True),
     # scale-dependent measured byte counters: deterministic, tight
     Rule("*_bytes_per_*", False, 0.25, True),
     # per-stage connectivity attribution (sort/tree/apply/exchange

@@ -1,75 +1,95 @@
-"""Serving driver: batched prefill + decode with the KV-cache machinery.
+"""Serving driver for the multi-tenant brain simulation service
+(repro.service; DESIGN.md §12): spin up a ``SimulationService``, submit a
+workload of tenant requests (one seed each), drive it to idle, and print
+per-tenant outcomes + service lifecycle counters.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+  PYTHONPATH=src python -m repro.launch.serve \
+      --slots 4 --tenants 8 --chunks 5 --neurons 128
+
+``--poison-slot N`` runs the chaos demo: one tenant's lane is NaN-poisoned
+mid-run and must be quarantined, rolled back, and finished via retry while
+the co-tenants complete untouched.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs import get_config, get_smoke_config
-from repro.launch.mesh import make_mesh
-from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import build_model
-from repro.parallel import sharding as shd
+from repro import telemetry
+from repro.configs.msp_brain import BrainConfig
+from repro.runtime import chaos
+from repro.service import ServiceConfig, SimRequest, SimulationService
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--mesh", default="1x1")
-    ap.add_argument("--greedy", action="store_true", default=True)
-    args = ap.parse_args()
+def build_config(args) -> BrainConfig:
+    return BrainConfig(
+        neurons_per_rank=args.neurons,
+        local_levels=args.levels,
+        frontier_cap=args.neurons,
+        max_synapses=8,
+        rate_period=10,
+        requests_cap_factor=100,
+        subs_cap_factor=100,
+        rate_exchange=args.exchange)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    da, mo = (int(x) for x in args.mesh.split("x"))
-    mesh = make_mesh((da, mo), ("data", "model"))
-    api = build_model(cfg)
-    params = api.init(jax.random.key(0))
-    max_seq = args.prompt_len + args.gen
 
-    key = jax.random.key(1)
-    batch = {"tokens": jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-    if cfg.family == "vlm":
-        batch["patch_embeds"] = jax.random.normal(
-            key, (args.batch, cfg.num_patches, cfg.d_model), jnp.bfloat16)
-    if cfg.family == "audio":
-        batch["frames"] = jax.random.normal(
-            key, (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="multi-tenant brain simulation service driver")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed workload (2 slots, 3 tenants)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--chunks", type=int, default=5,
+                    help="chunk budget per tenant")
+    ap.add_argument("--neurons", type=int, default=128,
+                    help="neurons per rank")
+    ap.add_argument("--levels", type=int, default=4,
+                    help="local octree levels")
+    ap.add_argument("--exchange", default="dense",
+                    choices=("dense", "sparse"))
+    ap.add_argument("--queue-cap", type=int, default=16)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock deadline")
+    ap.add_argument("--poison-slot", type=int, default=None,
+                    help="chaos demo: NaN-poison this slot mid-run")
+    ap.add_argument("--heartbeat", default=None,
+                    help="heartbeat JSON path")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.slots, args.tenants, args.chunks = 2, 3, 3
+        args.neurons, args.levels = 32, 3
 
-    prefill = jax.jit(make_prefill_step(api, mesh),
-                      static_argnames=())
-    decode = jax.jit(make_decode_step(api, mesh), donate_argnums=(1,))
+    cfg = build_config(args)
+    svc = SimulationService(
+        cfg, ServiceConfig(num_slots=args.slots,
+                           queue_cap=args.queue_cap,
+                           heartbeat_path=args.heartbeat))
+    if args.poison_slot is not None:
+        svc.chaos_hooks.append(
+            chaos.poison_slot_nan(args.poison_slot, after_chunk=1))
 
-    t0 = time.time()
-    with shd.use_mesh(mesh):
-        logits, state = api.prefill(params, batch, mesh,
-                                    pad_cache_to=max_seq)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t_prefill = time.time() - t0
-    out = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, state = decode(params, state, tok)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_dec = time.time() - t0
-    gen = jnp.stack(out, 1)
-    print(f"prefill {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
-          f"decoded {args.gen - 1} steps in {t_dec:.2f}s "
-          f"({(args.gen - 1) * args.batch / max(t_dec, 1e-9):.1f} tok/s)")
-    print("sample generations:", gen[:2].tolist())
+    handles = [svc.submit(SimRequest(seed=100 + i, chunks=args.chunks,
+                                     priority=i % 2,
+                                     deadline_s=args.deadline_s,
+                                     tag=f"tenant{i}"))
+               for i in range(args.tenants)]
+    with telemetry.span("serve.drive", tenants=args.tenants):
+        svc.run_until_idle()
+
+    for h in handles:
+        r = h.result
+        print(f"  {h.request.tag:>10}  seed={h.request.seed}  "
+              f"{r.status.value:<18} chunks={r.chunks_done}/"
+              f"{h.request.chunks}  retries={r.retries}")
+    stats = svc.stats()
+    print("service:", {k: v for k, v in sorted(stats.items()) if v})
+    done = sum(1 for h in handles
+               if h.result is not None and h.result.status.name == "DONE")
+    print(f"{done}/{len(handles)} tenants DONE")
+    return 0 if done == len(handles) or args.poison_slot is not None \
+        else 1
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

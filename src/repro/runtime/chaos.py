@@ -19,6 +19,18 @@ recovery tests are exactly reproducible:
     ``subs_cap_factor``/``requests_cap_factor`` (e.g. ``overflow_config``)
     and the exchange itself generates the persistent overflow that drives
     the degradation ladder.
+
+Slot-targeted injectors attack a single tenant of the multi-tenant
+service (``SimulationService.chaos_hooks``, fired after each tick's
+step, before the health read):
+
+  * ``poison_slot_nan``       NaN one element of ONE slot's lane — the
+                              fault-isolation attack (co-tenants must
+                              stay bit-identical to solo runs);
+  * ``stall_slot``            freeze one slot's credited progress for N
+                              ticks (the stall-watchdog attack);
+  * ``overflow_slot_config``  mutate one request's chunk budget past the
+                              admission cap (typed-rejection attack).
 """
 from __future__ import annotations
 
@@ -100,6 +112,61 @@ def corrupt_checkpoint(ckpt_dir: str, step: Optional[int] = None,
     else:
         raise ValueError(f"unknown mode {mode!r}")
     return step
+
+
+def poison_slot_nan(slot: int, field: str = "v", index: int = 0,
+                    after_chunk: int = 0):
+    """Service hook: once slot ``slot``'s chunk counter reaches
+    ``after_chunk``, overwrite one element of that lane's
+    ``neurons.<field>`` (or ``positions``) with NaN — exactly once. Only
+    lane ``slot`` is touched: the service must quarantine/roll back that
+    slot while every co-tenant stays bit-identical to a solo run."""
+    fired = {"done": False}
+
+    def hook(service):
+        if fired["done"]:
+            return
+        st = service.state
+        if int(service.batch.chunks(st)[slot]) < after_chunk:
+            return
+        fired["done"] = True
+        if field == "positions":
+            leaf, put = st.positions, \
+                lambda a: st._replace(positions=a)
+        else:
+            leaf = getattr(st.neurons, field)
+            put = lambda a: st._replace(
+                neurons=st.neurons._replace(**{field: a}))
+        arr = np.array(jax.device_get(leaf))   # (B, ...) writable copy
+        arr[slot].reshape(-1)[index] = np.nan
+        service.state = put(jax.device_put(arr, leaf.sharding))
+
+    return hook
+
+
+def stall_slot(slot: int, ticks: int = 4, after_tick: int = 0):
+    """Service hook: once the service reaches ``after_tick``, freeze slot
+    ``slot``'s credited progress for ``ticks`` ticks — exactly once. The
+    stall watchdog must quarantine (and eventually evict) only that
+    slot."""
+    fired = {"done": False}
+
+    def hook(service):
+        if fired["done"] or service.tick_count < after_tick:
+            return
+        fired["done"] = True
+        service.slots[slot].stall_ticks = ticks
+
+    return hook
+
+
+def overflow_slot_config(request, max_chunks_per_request: int):
+    """A copy of ``request`` whose chunk budget exceeds the service's
+    admission cap — submitting it must raise the typed
+    ``IncompatibleRequest``, never enqueue (the single-tenant overflow
+    attack on admission control)."""
+    return dataclasses.replace(request,
+                               chunks=max_chunks_per_request + 1)
 
 
 def overflow_config(cfg, subs_cap_factor: float = 0.0001,

@@ -40,6 +40,26 @@ def write_heartbeat(path: str, payload: dict):
     os.replace(tmp, path)
 
 
+def read_heartbeat(path: str, max_age_s: Optional[float] = None,
+                   now: Optional[float] = None):
+    """Watchdog-side read of an atomic heartbeat: returns
+    ``(payload, age_s, verdict)`` with verdict one of ``'fresh'``,
+    ``'stale'`` (age over ``max_age_s``), ``'missing'`` (no/garbled
+    file — a torn write is impossible by construction, so unreadable
+    JSON means the process never completed a heartbeat). ``now``
+    overrides the clock for tests."""
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+        t = float(payload["t"])
+    except (OSError, ValueError, KeyError, TypeError):
+        return None, None, "missing"
+    age = (time.time() if now is None else now) - t
+    if max_age_s is not None and age > max_age_s:
+        return payload, age, "stale"
+    return payload, age, "fresh"
+
+
 @dataclasses.dataclass
 class RunnerConfig:
     ckpt_dir: str

@@ -25,7 +25,9 @@ Mechanisms:
     safe) makes the loop write a final checkpoint and return
     ``"preempted"`` at the next chunk boundary;
   * atomic heartbeat JSON per interval (``fault_tolerance
-    .write_heartbeat``) for an external watchdog;
+    .write_heartbeat``) for an external watchdog, with an optional
+    self-check of the previous beat's age (``fault_tolerance
+    .read_heartbeat``) surfacing a ``heartbeat_stale`` lifecycle count;
   * elastic resume: a fresh runner whose cfg disagrees with the
     checkpoint metadata (rank count after shrinking the job, exchange
     layout or caps after a degrade) routes through
@@ -48,7 +50,7 @@ from repro import telemetry
 from repro.checkpoint import manager
 from repro.checkpoint.manager import AsyncCheckpointer
 from repro.runtime import elastic
-from repro.runtime.fault_tolerance import write_heartbeat
+from repro.runtime.fault_tolerance import read_heartbeat, write_heartbeat
 
 
 @dataclasses.dataclass
@@ -61,6 +63,10 @@ class SimRunnerConfig:
     keep: int = 3
     max_rollbacks: int = 3
     heartbeat_path: Optional[str] = None
+    # previous-beat age (s) beyond which the runner records a
+    # heartbeat_stale lifecycle event before publishing a fresh beat —
+    # the in-band echo of the external watchdog's verdict
+    heartbeat_max_age_s: Optional[float] = None
     # degradation ladder
     max_degrades: int = 2
     overflow_patience: int = 2     # consecutive overflowing intervals
@@ -258,6 +264,16 @@ class SimulationRunner:
 
     def _heartbeat(self, chunk: int):
         if self.cfg.heartbeat_path:
+            # staleness self-check: if the previous beat aged past the
+            # watchdog threshold, the interval overran — record it as a
+            # lifecycle event (the in-band echo of read_heartbeat's
+            # 'stale' verdict) before publishing the fresh beat
+            if self.cfg.heartbeat_max_age_s is not None:
+                _, _, verdict = read_heartbeat(
+                    self.cfg.heartbeat_path,
+                    max_age_s=self.cfg.heartbeat_max_age_s)
+                if verdict == "stale":
+                    self.sim.lifecycle["heartbeat_stale"] += 1
             write_heartbeat(self.cfg.heartbeat_path,
                             {"chunk": chunk,
                              "lifecycle": dict(self.sim.lifecycle)})

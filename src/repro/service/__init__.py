@@ -1,0 +1,28 @@
+"""repro.service — slot-based multi-tenant simulation service.
+
+Public surface:
+
+  ``SimulationService`` / ``ServiceConfig``  host loop: admission,
+      deadlines, retry/backoff, watchdog, degradation ladder;
+  ``SlotBatch``                              device layer: B lanes on a
+      leading slot axis, one compiled trace;
+  ``SimRequest`` / ``RequestHandle`` / ``TenantResult`` / request status
+      + typed rejections.
+
+See DESIGN.md §12 for the architecture and the isolation proof sketch.
+"""
+from repro.service.service import (SERVICE_LIFECYCLE_KEYS, ServiceConfig,
+                                   SimulationService)
+from repro.service.slots import SlotBatch, stacked_specs
+from repro.service.types import (BackoffRecord, IncompatibleRequest,
+                                 RequestHandle, RequestStatus, ServiceError,
+                                 ServiceOverloaded, ServiceConfigError,
+                                 SimRequest, TenantResult)
+
+__all__ = [
+    "SimulationService", "ServiceConfig", "SERVICE_LIFECYCLE_KEYS",
+    "SlotBatch", "stacked_specs",
+    "SimRequest", "RequestHandle", "TenantResult", "BackoffRecord",
+    "RequestStatus", "ServiceError", "ServiceOverloaded",
+    "IncompatibleRequest", "ServiceConfigError",
+]

@@ -220,6 +220,12 @@ def health_verdict(state, ctx: PhaseContext):
     ``health_flags`` is psum'd so every rank carries the same verdict —
     readers must reduce it with max(), never sum(). The raw per-rank
     census gauges stay rank-local for diagnosis.
+
+    Under the multi-tenant service (repro.service) this whole verdict is
+    vmapped over the slot axis: every gauge — ``health_flags`` included —
+    gains a leading (B,) axis and each slot's bits are computed from that
+    slot's lane alone (the psum batches per-lane over 'ranks' only), so
+    the service can quarantine exactly the offending tenant.
     """
     neu = state.neurons
     nonfinite = sum(

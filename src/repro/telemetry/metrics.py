@@ -100,7 +100,7 @@ HEALTH_CONSERVATION = 4  # live entries outside the [2F-2D, 2F-D] bound
 # host-side runner lifecycle counters, merged into Simulator.stats() and
 # the repro.telemetry/v1 report (runtime/sim_runner.py maintains them)
 LIFECYCLE_KEYS = ("checkpoint_saves", "checkpoint_restores", "rollbacks",
-                  "restarts", "degrade_events")
+                  "restarts", "degrade_events", "heartbeat_stale")
 
 DEFAULT_HISTORY = 64         # per-chunk ring length (BrainConfig.metrics_history)
 

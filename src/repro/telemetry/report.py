@@ -74,6 +74,21 @@ def lifecycle_block(lifecycle: dict) -> dict:
     return {k: int(v) for k, v in lifecycle.items()}
 
 
+def service_block(stats: dict, handles=None) -> dict:
+    """Serialize a multi-tenant service run (repro.service): the service
+    lifecycle counters (admissions, completions, quarantines, rollbacks,
+    sheds, ...) plus a per-terminal-status census of the submitted
+    requests."""
+    out = {"lifecycle": {k: int(v) for k, v in stats.items()}}
+    if handles is not None:
+        census: Dict[str, int] = {}
+        for h in handles:
+            s = h.status.value
+            census[s] = census.get(s, 0) + 1
+        out["requests"] = census
+    return out
+
+
 def histograms_block(metrics) -> dict:
     return {k: np.asarray(v).sum(axis=0).tolist()
             for k, v in metrics.hists.items()}
@@ -102,9 +117,12 @@ def make_report(bench: str, cases: Dict[str, dict], *, smoke: bool = False,
                 histograms: Optional[dict] = None,
                 spans: Optional[list] = None,
                 roofline: Optional[dict] = None,
-                lifecycle: Optional[dict] = None) -> dict:
+                lifecycle: Optional[dict] = None,
+                service: Optional[dict] = None) -> dict:
     rep = {"schema": SCHEMA, "bench": bench, "smoke": bool(smoke),
            "cases": cases}
+    if service is not None:
+        rep["service"] = service
     if mesh is not None:
         rep["mesh"] = mesh
     if counters is not None:

@@ -418,3 +418,186 @@ def test_degrade_ladder_4rank():
         print('DEGRADE_OK')
     """)
     assert "DEGRADE_OK" in out
+
+
+# ===================================================================
+# heartbeat staleness (read side + runner lifecycle echo)
+# ===================================================================
+def test_read_heartbeat_fresh_stale_missing(tmp_path):
+    hb = str(tmp_path / "hb.json")
+    payload, age, verdict = ft.read_heartbeat(hb, max_age_s=1.0)
+    assert (payload, age, verdict) == (None, None, "missing")
+    ft.write_heartbeat(hb, {"chunk": 7})
+    payload, age, verdict = ft.read_heartbeat(hb, max_age_s=60.0)
+    assert verdict == "fresh" and payload["chunk"] == 7 and age >= 0
+    # clock override: the same beat judged 2 minutes later is stale
+    stale_now = payload["t"] + 120.0
+    payload, age, verdict = ft.read_heartbeat(hb, max_age_s=60.0,
+                                              now=stale_now)
+    assert verdict == "stale" and age > 60.0
+    # no threshold -> age is reported but never judged stale
+    _, _, verdict = ft.read_heartbeat(hb, now=stale_now)
+    assert verdict == "fresh"
+    # a garbled file reads as missing (atomic writes can't tear, so
+    # unparseable JSON means no heartbeat was ever completed)
+    with open(hb, "w") as f:
+        f.write("{not json")
+    assert ft.read_heartbeat(hb)[2] == "missing"
+
+
+def test_runner_counts_stale_heartbeat(tmp_path, small_cfg):
+    hb = str(tmp_path / "hb.json")
+    # plant an ancient beat: the runner's first interval must flag it
+    ft.write_heartbeat(hb, {"chunk": 0})
+    with open(hb) as f:
+        old = json.load(f)
+    old["t"] -= 3600.0
+    with open(hb, "w") as f:
+        json.dump(old, f)
+    r = SimulationRunner(
+        SimRunnerConfig(str(tmp_path / "ck"), ckpt_every=1,
+                        heartbeat_path=hb, heartbeat_max_age_s=60.0),
+        cfg=small_cfg)
+    assert r.run(2) == "done"
+    assert r.sim.lifecycle["heartbeat_stale"] == 1   # only the planted beat
+    assert r.sim.stats()["heartbeat_stale"] == 1
+
+
+# ===================================================================
+# health_verdict unit matrix: each monitored field individually
+# tripped and individually reported (single-rank here; 4-rank below)
+# ===================================================================
+from repro.telemetry import metrics as tm  # noqa: E402
+
+
+def _fresh_sim(small_cfg):
+    sim = Simulator(small_cfg)
+    sim.run(2)
+    assert sim.probe_health() == 0
+    return sim
+
+
+def _put_leaf(leaf, value, index=0):
+    arr = np.array(jax.device_get(leaf))
+    arr.reshape(-1)[index] = value
+    return jax.device_put(arr, leaf.sharding)
+
+
+@pytest.mark.parametrize("field", ["v", "u", "calcium", "rate"])
+@pytest.mark.parametrize("bad", [np.nan, np.inf, -np.inf])
+def test_health_matrix_neuron_fields(small_cfg, field, bad):
+    sim = _fresh_sim(small_cfg)
+    st = sim.state
+    sim._state = st._replace(neurons=st.neurons._replace(
+        **{field: _put_leaf(getattr(st.neurons, field), bad)}))
+    assert sim.probe_health() == tm.HEALTH_NONFINITE
+
+
+@pytest.mark.parametrize("bad", [np.nan, np.inf])
+def test_health_matrix_positions(small_cfg, bad):
+    sim = _fresh_sim(small_cfg)
+    st = sim.state
+    sim._state = st._replace(
+        positions=_put_leaf(st.positions, bad, index=-1))
+    assert sim.probe_health() == tm.HEALTH_NONFINITE
+
+
+def test_health_matrix_half_edge_asymmetry(small_cfg):
+    sim = _fresh_sim(small_cfg)
+    st = sim.state
+    arr = np.array(jax.device_get(st.in_edges))
+    live = np.argwhere(arr >= 0)
+    assert len(live) > 0
+    arr[tuple(live[0])] = -1          # orphan one half-edge
+    sim._state = st._replace(
+        in_edges=jax.device_put(arr, st.in_edges.sharding))
+    flags = sim.probe_health()
+    assert flags & tm.HEALTH_ASYMMETRY
+    assert not flags & tm.HEALTH_NONFINITE
+
+
+def test_health_matrix_synapse_conservation(small_cfg):
+    sim = _fresh_sim(small_cfg)
+    st = sim.state
+    c = dict(st.stats.counters)
+    arr = np.array(jax.device_get(c["synapses_formed"]))
+    arr += 10                         # census now outside [2F-2D, 2F-D]
+    c["synapses_formed"] = jax.device_put(
+        arr, st.stats.counters["synapses_formed"].sharding)
+    import dataclasses as _dc
+    sim._state = st._replace(stats=_dc.replace(st.stats, counters=c))
+    assert sim.probe_health() == tm.HEALTH_CONSERVATION
+
+
+def test_health_matrix_overflow_masks_census_checks(small_cfg):
+    """The asymmetry/conservation bits are guarded on request_overflow
+    == 0 (dropped notifications legitimately skew the census)."""
+    sim = _fresh_sim(small_cfg)
+    st = sim.state
+    c = dict(st.stats.counters)
+    for key, delta in (("synapses_formed", 10), ("request_overflow", 1)):
+        arr = np.array(jax.device_get(c[key]))
+        arr += delta
+        c[key] = jax.device_put(arr, st.stats.counters[key].sharding)
+    import dataclasses as _dc
+    sim._state = st._replace(stats=_dc.replace(st.stats, counters=c))
+    assert sim.probe_health() == 0
+
+
+def test_health_matrix_4rank():
+    """The same matrix where it matters operationally: each fault class
+    planted on ONE rank's shard must surface in the psum'd global
+    verdict on a 4-rank mesh."""
+    out = run_py(f"""
+        import dataclasses, jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.sim import Simulator
+        from repro.telemetry import metrics as tm
+
+        sim = Simulator(BrainConfig(**{SMALL!r}))
+        assert sim.num_ranks == 4
+        sim.run(2)
+        assert sim.probe_health() == 0
+        clean = sim.state
+
+        def put(leaf, value, index):
+            arr = np.array(jax.device_get(leaf))
+            arr.reshape(-1)[index] = value
+            return jax.device_put(arr, leaf.sharding)
+
+        # nonfinite: one element in rank 2's shard of each field
+        for field in ("v", "u", "calcium", "rate"):
+            st = clean
+            n = np.asarray(jax.device_get(
+                getattr(st.neurons, field))).size
+            sim._state = st._replace(neurons=st.neurons._replace(
+                **{{field: put(getattr(st.neurons, field), np.nan,
+                               n // 2)}}))
+            assert sim.probe_health() == tm.HEALTH_NONFINITE, field
+        st = clean
+        sim._state = st._replace(
+            positions=put(st.positions, np.inf, -1))
+        assert sim.probe_health() == tm.HEALTH_NONFINITE
+
+        # asymmetry: orphan a half-edge on one rank only
+        st = clean
+        arr = np.array(jax.device_get(st.in_edges))
+        live = np.argwhere(arr >= 0)
+        arr[tuple(live[len(live) // 2])] = -1
+        sim._state = st._replace(
+            in_edges=jax.device_put(arr, st.in_edges.sharding))
+        assert sim.probe_health() & tm.HEALTH_ASYMMETRY
+
+        # conservation: inflate one rank's formed counter
+        st = clean
+        c = dict(st.stats.counters)
+        arr = np.array(jax.device_get(c["synapses_formed"]))
+        arr[1] += 10
+        c["synapses_formed"] = jax.device_put(
+            arr, st.stats.counters["synapses_formed"].sharding)
+        sim._state = st._replace(
+            stats=dataclasses.replace(st.stats, counters=c))
+        assert sim.probe_health() == tm.HEALTH_CONSERVATION
+        print("MATRIX4-OK")
+    """)
+    assert "MATRIX4-OK" in out

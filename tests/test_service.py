@@ -1,0 +1,386 @@
+"""Multi-tenant simulation service tests (DESIGN.md §12).
+
+In-process (single device): admission/queueing/completion, typed
+rejections (overload shed, incompatible budget, fused-template config
+error), per-tenant bit-identity vs solo Simulator runs, deadline
+cancellation at chunk boundaries, retry with exponential backoff +
+recorded spans, the stall watchdog, the degradation ladder
+(shrink-then-shed), single-rank fault isolation, and the service
+heartbeat.
+
+Subprocess (4 host devices): the acceptance isolation test — B=4
+co-batched tenants, one NaN-poisoned via ``chaos.poison_slot_nan``; the
+poisoned slot must quarantine + roll back while every co-tenant's final
+state is bit-identical to a solo run and its streamed observables are
+bit-identical to an unpoisoned service run — across dense and sparse
+exchange. Plus 4-rank bit-identity of the batched step itself.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro import telemetry  # noqa: E402
+from repro.configs.msp_brain import BrainConfig  # noqa: E402
+from repro.core import engine  # noqa: E402
+from repro.runtime import chaos  # noqa: E402
+from repro.service import (IncompatibleRequest,  # noqa: E402
+                           RequestStatus, ServiceConfig,
+                           ServiceConfigError, ServiceOverloaded,
+                           SimRequest, SimulationService, SlotBatch)
+from repro.sim import Simulator  # noqa: E402
+
+SMALL = dict(neurons_per_rank=32, local_levels=3, frontier_cap=32,
+             max_synapses=8, rate_period=10, requests_cap_factor=100,
+             subs_cap_factor=100)
+
+
+def run_py(code, devices=4, timeout=560):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    proc = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    return proc.stdout
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.array_equal(np.asarray(jax.device_get(x)),
+                              np.asarray(jax.device_get(y)),
+                              equal_nan=True)
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return BrainConfig(**SMALL)
+
+
+# one compiled slot template per width, shared by every service instance
+# in this module (the step trace is identical across service restarts)
+@pytest.fixture(scope="module")
+def batch2(small_cfg):
+    return SlotBatch(small_cfg, 2)
+
+
+@pytest.fixture(scope="module")
+def batch4(small_cfg):
+    return SlotBatch(small_cfg, 4)
+
+
+def _solo_final(cfg, seed, chunks):
+    sim = Simulator(dataclasses.replace(cfg, seed=seed))
+    sim.run(chunks)
+    return jax.device_get(sim.state)
+
+
+# ===================================================================
+# admission, completion, typed rejections
+# ===================================================================
+def test_submit_queue_complete_and_solo_identity(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2,
+                                                     queue_cap=4),
+                            batch=batch2)
+    hs = [svc.submit(SimRequest(seed=s, chunks=c))
+          for s, c in ((3, 3), (11, 2), (5, 3))]
+    assert [h.status for h in hs] == [RequestStatus.RUNNING,
+                                      RequestStatus.RUNNING,
+                                      RequestStatus.QUEUED]
+    svc.run_until_idle()
+    stats = svc.stats()
+    assert stats["requests_admitted"] == 3
+    assert stats["requests_completed"] == 3
+    assert stats["slots_busy"] == 0 and stats["queue_depth"] == 0
+    for h in hs:
+        r = h.result
+        assert r is not None and r.status is RequestStatus.DONE
+        assert r.status.terminal
+        assert r.chunks_done == h.request.chunks
+        # streamed observables: one (tick, chunk, rate, calcium, live)
+        # row per tick the tenant ran, chunk column ending at the budget
+        assert r.observations.shape[1] == 5
+        assert int(r.observations[-1, 1]) == h.request.chunks
+        assert r.counters["synapses_formed"] > 0
+        # per-tenant final state bit-identical to a solo run
+        _leaves_equal(r.final_state,
+                      _solo_final(small_cfg, h.request.seed,
+                                  h.request.chunks))
+
+
+def test_overload_shed_typed(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2,
+                                                     queue_cap=1),
+                            batch=batch2)
+    svc.submit(SimRequest(seed=1, chunks=2))
+    svc.submit(SimRequest(seed=2, chunks=2))
+    svc.submit(SimRequest(seed=3, chunks=2))      # fills the queue
+    with pytest.raises(ServiceOverloaded) as ei:
+        svc.submit(SimRequest(seed=4, chunks=2))
+    assert ei.value.queue_depth == 1 and ei.value.queue_cap == 1
+    assert svc.stats()["requests_rejected"] == 1
+    assert len(svc.queue) == 1                    # never grew past cap
+
+
+def test_incompatible_budget_typed(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2),
+                            batch=batch2)
+    bad = chaos.overflow_slot_config(
+        SimRequest(seed=1, chunks=2),
+        svc.service_cfg.max_chunks_per_request)
+    with pytest.raises(IncompatibleRequest):
+        svc.submit(bad)
+    with pytest.raises(IncompatibleRequest):
+        svc.submit(SimRequest(seed=1, chunks=0))
+    assert not svc.queue and svc.stats()["requests_admitted"] == 0
+
+
+def test_fused_template_rejected(small_cfg):
+    fused = dataclasses.replace(small_cfg, activity_impl="fused")
+    with pytest.raises(ServiceConfigError):
+        SlotBatch(fused, 2)
+    with pytest.raises(ServiceConfigError):
+        SlotBatch(small_cfg, 0)
+
+
+def test_shared_batch_width_mismatch(small_cfg, batch2):
+    with pytest.raises(ServiceConfigError):
+        SimulationService(small_cfg, ServiceConfig(num_slots=4),
+                          batch=batch2)
+
+
+# ===================================================================
+# deadlines
+# ===================================================================
+def test_deadline_cancels_at_boundary_and_frees_slot(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2,
+                                                     queue_cap=4),
+                            batch=batch2)
+    doomed = svc.submit(SimRequest(seed=7, chunks=10_000, deadline_s=0.0))
+    ok = svc.submit(SimRequest(seed=8, chunks=2))
+    svc.run_until_idle()
+    assert doomed.status is RequestStatus.DEADLINE_EXCEEDED
+    assert doomed.result.chunks_done < doomed.request.chunks
+    assert ok.result.status is RequestStatus.DONE
+    stats = svc.stats()
+    assert stats["deadline_cancellations"] == 1
+    assert stats["slots_busy"] == 0               # the slot was freed
+
+
+def test_deadline_expires_queued_request(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2,
+                                                     queue_cap=4),
+                            batch=batch2)
+    svc.submit(SimRequest(seed=1, chunks=2))
+    svc.submit(SimRequest(seed=2, chunks=2))
+    queued = svc.submit(SimRequest(seed=3, chunks=2, deadline_s=0.0))
+    assert queued.status is RequestStatus.QUEUED
+    svc.run_until_idle()
+    assert queued.status is RequestStatus.DEADLINE_EXCEEDED
+    assert queued.result.chunks_done == 0
+    assert svc.stats()["deadline_cancellations"] == 1
+
+
+# ===================================================================
+# retry / backoff / watchdog
+# ===================================================================
+def test_transient_fault_retries_with_backoff(small_cfg, batch2):
+    telemetry.clear()
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2),
+                            batch=batch2)
+    svc.chaos_hooks.append(chaos.poison_slot_nan(0, after_chunk=2))
+    poisoned = svc.submit(SimRequest(seed=9, chunks=4, max_retries=2))
+    svc.run_until_idle()
+    r = poisoned.result
+    assert r.status is RequestStatus.DONE
+    assert r.retries == 1 and len(r.backoffs) == 1
+    b = r.backoffs[0]
+    assert b.attempt == 1 and b.reason == "health"
+    assert 1 <= b.delay_ticks <= 2                # base + jitter
+    stats = svc.stats()
+    assert stats["quarantines"] == 1 and stats["slot_rollbacks"] == 1
+    spans = telemetry.spans("service.backoff")
+    assert len(spans) == 1 and spans[0].attrs["attempt"] == 1
+    assert telemetry.spans("service.rollback")
+    # retry replays from the verified snapshot: still bit-identical
+    _leaves_equal(r.final_state, _solo_final(small_cfg, 9, 4))
+
+
+def test_persistent_fault_exhausts_retries(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2),
+                            batch=batch2)
+
+    def always_poison(service):   # re-poison after every step
+        chaos.poison_slot_nan(0, after_chunk=0)(service)
+
+    svc.chaos_hooks.append(always_poison)
+    doomed = svc.submit(SimRequest(seed=4, chunks=4, max_retries=1))
+    svc.run_until_idle(max_ticks=50)
+    r = doomed.result
+    assert r.status is RequestStatus.FAILED
+    assert r.retries == 2                          # 1 retry + final strike
+    assert [b.attempt for b in r.backoffs] == [1]
+    assert svc.stats()["slot_evictions"] == 1
+    assert svc.stats()["slots_busy"] == 0
+
+
+def test_stall_watchdog_evicts(small_cfg, batch2):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=2,
+                                                     stall_patience=2),
+                            batch=batch2)
+    svc.chaos_hooks.append(chaos.stall_slot(0, ticks=50))
+    stuck = svc.submit(SimRequest(seed=6, chunks=30, max_retries=0))
+    ok = svc.submit(SimRequest(seed=2, chunks=3))
+    svc.run_until_idle(max_ticks=30)
+    assert stuck.result.status is RequestStatus.STALLED
+    assert stuck.result.backoffs == []
+    assert ok.result.status is RequestStatus.DONE
+    stats = svc.stats()
+    assert stats["stall_evictions"] == 1 and stats["slots_busy"] == 0
+
+
+# ===================================================================
+# degradation ladder
+# ===================================================================
+def test_degradation_shrinks_then_sheds(small_cfg, batch2):
+    svc = SimulationService(
+        small_cfg,
+        ServiceConfig(num_slots=2, queue_cap=1, chunks_per_tick=4,
+                      min_chunks_per_tick=1, overload_patience=1),
+        batch=batch2)
+    low = svc.submit(SimRequest(seed=1, chunks=200, priority=0))
+    high = svc.submit(SimRequest(seed=2, chunks=8, priority=5))
+    waiting = svc.submit(SimRequest(seed=3, chunks=2))   # queue full
+    svc.run_until_idle(max_ticks=60)
+    # ladder rung 1: chunk size halved to the floor before any shedding
+    assert svc.chunks_per_tick == 1
+    # rung 2: the LOWEST-priority tenant was shed, the high one finished
+    assert low.result.status is RequestStatus.SHED
+    assert high.result.status is RequestStatus.DONE
+    assert waiting.result.status is RequestStatus.DONE
+    stats = svc.stats()
+    assert stats["requests_shed"] == 1
+    assert stats["degrade_events"] >= 3
+    shrinks = [e for e in svc.events if e["event"] == "degrade"
+               and e["action"] == "shrink_chunks_per_tick"]
+    sheds = [e for e in svc.events if e["event"] == "shed"]
+    assert shrinks and sheds
+    assert max(e["tick"] for e in shrinks) < min(e["tick"]
+                                                 for e in sheds)
+
+
+# ===================================================================
+# fault isolation (single-rank; the 4-rank acceptance run is below)
+# ===================================================================
+def test_poisoned_slot_isolated_single_rank(small_cfg, batch4):
+    svc = SimulationService(small_cfg, ServiceConfig(num_slots=4),
+                            batch=batch4)
+    svc.chaos_hooks.append(
+        chaos.poison_slot_nan(1, field="calcium", after_chunk=1))
+    seeds = (3, 11, 5, 7)
+    hs = [svc.submit(SimRequest(seed=s, chunks=3)) for s in seeds]
+    svc.run_until_idle()
+    assert svc.stats()["quarantines"] >= 1
+    assert hs[1].retries >= 1
+    for h in hs:                    # poisoned slot recovered, all DONE,
+        r = h.result                # every lane bit-identical to solo
+        assert r.status is RequestStatus.DONE
+        _leaves_equal(r.final_state,
+                      _solo_final(small_cfg, h.request.seed, 3))
+    # co-tenant OBSERVABLES also match an unpoisoned service run
+    clean = SimulationService(small_cfg, ServiceConfig(num_slots=4),
+                              batch=batch4)
+    ch = [clean.submit(SimRequest(seed=s, chunks=3)) for s in seeds]
+    clean.run_until_idle()
+    for i in (0, 2, 3):
+        np.testing.assert_array_equal(hs[i].result.observations,
+                                      ch[i].result.observations)
+
+
+# ===================================================================
+# heartbeat
+# ===================================================================
+def test_service_heartbeat(tmp_path, small_cfg, batch2):
+    hb = str(tmp_path / "hb.json")
+    svc = SimulationService(small_cfg,
+                            ServiceConfig(num_slots=2,
+                                          heartbeat_path=hb),
+                            batch=batch2)
+    svc.submit(SimRequest(seed=1, chunks=2))
+    svc.run_until_idle()
+    with open(hb) as f:
+        d = json.load(f)
+    assert d["tick"] == svc.tick_count and "t" in d
+    assert d["lifecycle"]["requests_completed"] == 1
+
+
+# ===================================================================
+# 4-rank acceptance: isolation across exchange layouts (subprocess)
+# ===================================================================
+@pytest.mark.parametrize("exchange", ["dense", "sparse"])
+def test_isolation_4rank(exchange):
+    """B=4 tenants on a 4-rank mesh, slot 1 NaN-poisoned: the poisoned
+    slot quarantines + rolls back; every tenant (poisoned one included,
+    post-recovery) ends bit-identical to a solo run; co-tenant
+    observables are bit-identical to an unpoisoned service run."""
+    out = run_py(f"""
+        import dataclasses, jax, numpy as np
+        from repro.configs.msp_brain import BrainConfig
+        from repro.core import engine
+        from repro.runtime import chaos
+        from repro.service import (ServiceConfig, SimRequest,
+                                   SimulationService, SlotBatch,
+                                   RequestStatus)
+        from repro.sim import Simulator
+
+        cfg = BrainConfig(**{SMALL!r}, rate_exchange={exchange!r})
+        mesh = engine.make_brain_mesh()
+        assert mesh.shape["ranks"] == 4
+        seeds, chunks = (3, 11, 5, 7), 3
+        batch = SlotBatch(cfg, 4, mesh=mesh)
+
+        svc = SimulationService(cfg, ServiceConfig(num_slots=4),
+                                mesh=mesh, batch=batch)
+        svc.chaos_hooks.append(chaos.poison_slot_nan(1, after_chunk=1))
+        hs = [svc.submit(SimRequest(seed=s, chunks=chunks))
+              for s in seeds]
+        svc.run_until_idle()
+        st = svc.stats()
+        assert st["quarantines"] >= 1 and st["slot_rollbacks"] >= 1, st
+        assert hs[1].retries >= 1
+
+        clean = SimulationService(cfg, ServiceConfig(num_slots=4),
+                                  mesh=mesh, batch=batch)
+        ch = [clean.submit(SimRequest(seed=s, chunks=chunks))
+              for s in seeds]
+        clean.run_until_idle()
+
+        for i, h in enumerate(hs):
+            assert h.result.status is RequestStatus.DONE, (i, h)
+            sim = Simulator(dataclasses.replace(cfg, seed=h.request.seed),
+                            mesh=mesh)
+            sim.run(chunks)
+            la = jax.tree.leaves(h.result.final_state)
+            lb = jax.tree.leaves(jax.device_get(sim.state))
+            assert len(la) == len(lb)
+            for x, y in zip(la, lb):
+                assert np.array_equal(np.asarray(jax.device_get(x)),
+                                      np.asarray(y), equal_nan=True), i
+            if i != 1:      # co-tenant observables untouched by the fault
+                np.testing.assert_array_equal(
+                    h.observations, ch[i].observations)
+        print("ISOLATION-OK")
+    """)
+    assert "ISOLATION-OK" in out
