@@ -36,6 +36,15 @@ def main():
                 emit(f"fig89_calcium_{alg}_step{i * 100}", med * 1e6,
                      f"iqr={q3 - q1:.3f};syn_per_neuron={syn:.1f}")
 
+    # function next to the calcium-approximation quality: the engram
+    # pattern-completion workload (workloads.engram, DESIGN.md §13) —
+    # recall overlap on the rate-based transmission the figure evaluates
+    from repro.workloads import engram as weng
+    m, _ = weng.run_engram()
+    emit("fig89_engram_recall", m["recall_overlap"] * 1e6,
+         f"selectivity={m['engram_selectivity']:.3f};"
+         f"background={m['background_activation']:.3f}")
+
 
 if __name__ == "__main__":
     main()

@@ -48,6 +48,7 @@ BENCHES = {
     "fig11": ("benchmarks.bench_fig11_total", "BENCH_fig11.json"),
     "runner": ("benchmarks.bench_runner", "BENCH_runner.json"),
     "service": ("benchmarks.bench_service", "BENCH_service.json"),
+    "workloads": ("benchmarks.bench_workloads", "BENCH_workloads.json"),
 }
 
 
@@ -76,6 +77,15 @@ RULES = (
     # HBM-traffic or byte-volume win is a real regression at any size.
     # (These are deterministic byte-model/counter ratios, not wall time.)
     Rule("*_ratio", True, 0.5, False),
+    # workload quality (bench_workloads): function, not speed. Recall
+    # overlap is a deterministic fraction of a fixed protocol at matched
+    # shape — quality must not regress (ISSUE 10); the dynamic-params
+    # compile count is exact (any second trace is a retrace regression);
+    # the assimilation error is dynamics-derived, so generous slack.
+    Rule("recall_overlap", True, 0.3, True),
+    Rule("engram_selectivity", True, 0.5, True),
+    Rule("dyn_compile_count", False, 0.0, True),
+    Rule("assim_final_abs_err", False, 1.0, True),
     # scale-dependent wall times: noisy on shared CI — generous slack,
     # and only ever compared at identical (n_per_rank, num_ranks)
     Rule("walltime_reduction_pct", True, 1.0, True),

@@ -7,6 +7,7 @@ connectivity update every 100 steps.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -43,6 +44,13 @@ class BrainConfig:
     max_synapses: int = 32             # S_max per neuron (out and in)
     requests_cap_factor: int = 2       # all_to_all request buffer head-room
     subs_cap_factor: int = 2           # sparse-exchange subscription head-room
+    # measured per-rank unique-remote-source count the subscription registry
+    # is sized from (subs_cap_factor stays the head-room multiplier on top).
+    # None = the near-uniform synthetic default, n // num_ranks.
+    # ``Simulator.from_connectome`` bakes the max-over-ranks count measured
+    # on the loaded edge list here, so heavy-tailed real connectomes do not
+    # start life overflowing the registry (DESIGN.md §13).
+    subs_cap_base: Optional[int] = None
     # --- algorithm selection (old = paper baseline, new = paper contribution) ---
     connectivity_alg: str = "new"      # 'old' (move data) | 'new' (move compute)
     spike_alg: str = "new"             # 'old' (per-step IDs) | 'new' (rates + PRNG)

@@ -37,17 +37,30 @@ def cap_requests(cfg, num_ranks: int):
     return min(n, max(32, -(-per_dest // 8) * 8))
 
 
+def subs_base(cfg, num_ranks: int) -> int:
+    """The per-rank unique-remote-source estimate the subscription registry
+    is sized from: the measured count baked into ``cfg.subs_cap_base`` by
+    ``Simulator.from_connectome`` (heavy-tailed real connectomes), else the
+    near-uniform synthetic default ``n // num_ranks``. ``cap_subs`` and the
+    runner's degradation ladder (which inverts cap -> factor) must use the
+    same base, so it lives in one place."""
+    if getattr(cfg, "subs_cap_base", None) is not None:
+        return max(int(cfg.subs_cap_base), 32)
+    return max(cfg.neurons_per_rank // max(num_ranks, 1), 32)
+
+
 def cap_subs(cfg, num_ranks: int):
     """Subscription-registry capacity for the sparse rate exchange. The hard
     ceiling is min(n * s_max, (R-1) * n) — a rank can never subscribe to more
     unique remote sources than it has in-edge slots or than exist remotely.
-    ``subs_cap_factor`` scales the default head-room below that (tests and
-    benchmarks that require sparse == dense bit-identity raise it until
-    ``stats['request_overflow']`` stays zero, like requests_cap_factor)."""
+    ``subs_cap_factor`` scales the head-room over ``subs_base`` below that
+    (tests and benchmarks that require sparse == dense bit-identity raise it
+    until ``stats['request_overflow']`` stays zero, like
+    requests_cap_factor; ``from_connectome`` instead measures the base)."""
     n = cfg.neurons_per_rank
     full = min(n * cfg.max_synapses, max(num_ranks - 1, 1) * n)
-    per = max(n // max(num_ranks, 1), 32) * cfg.subs_cap_factor
-    return min(full, max(32, -(-per // 8) * 8))
+    per = subs_base(cfg, num_ranks) * cfg.subs_cap_factor
+    return int(min(full, max(32, -(-per // 8) * 8)))
 
 
 def push_subscribed_rates(subs, rate, axis_name, num_ranks: int, n: int):

@@ -15,6 +15,10 @@ recovery tests are exactly reproducible:
   * ``corrupt_checkpoint``  truncate / bit-flip / unlink pieces of an
                             on-disk checkpoint (the crc32 + typed-error
                             path: restores must skip to an older step);
+  * ``drop_region_input``    zero one region's external drive for k
+                            chunks (hook for the assimilation loop in
+                            ``workloads.assimilate`` — its controller
+                            must recover the target rate);
   * overflow pressure has no injector — build the config with a shrunken
     ``subs_cap_factor``/``requests_cap_factor`` (e.g. ``overflow_config``)
     and the exchange itself generates the persistent overflow that drives
@@ -167,6 +171,24 @@ def overflow_slot_config(request, max_chunks_per_request: int):
     attack on admission control)."""
     return dataclasses.replace(request,
                                chunks=max_chunks_per_request + 1)
+
+
+def drop_region_input(region, chunks: int = 2, after_chunk: int = 0):
+    """Assimilation-loop hook: once the loop reaches ``after_chunk``,
+    zero ``region``'s external background drive for ``chunks`` chunks —
+    exactly once (``workloads.assimilate.AssimilationLoop.drop``). The
+    controller must detect the rate collapse and wind the drive back up
+    after the drop window closes (the recovery test in
+    tests/test_workloads.py)."""
+    fired = {"done": False}
+
+    def hook(loop):
+        if fired["done"] or loop.chunk_index < after_chunk:
+            return
+        fired["done"] = True
+        loop.drop(region, chunks)
+
+    return hook
 
 
 def overflow_config(cfg, subs_cap_factor: float = 0.0001,

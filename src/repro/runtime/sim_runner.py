@@ -222,8 +222,7 @@ class SimulationRunner:
             # not the raw factor: pick the smallest integer factor whose
             # cap is >= growth x the current cap
             cap_old = routing.cap_subs(cfg, self.sim.num_ranks)
-            denom = max(cfg.neurons_per_rank
-                        // max(self.sim.num_ranks, 1), 32)
+            denom = routing.subs_base(cfg, self.sim.num_ranks)
             new_factor = -(-cap_old * self.cfg.subs_growth_factor
                            // denom)
             new_cfg = dataclasses.replace(cfg,

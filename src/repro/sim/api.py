@@ -17,9 +17,11 @@ tests/test_multidevice.py).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -90,6 +92,7 @@ class Simulator:
             self._state = None
             self._probe_fn = None
             self._rebuild_fn = None
+            self._dyn_fn = None
             # host-side runner lifecycle counters (telemetry.metrics
             # .LIFECYCLE_KEYS), merged into stats() and owned jointly
             # with runtime.sim_runner.SimulationRunner
@@ -100,6 +103,78 @@ class Simulator:
                     profile_dir=None) -> "Simulator":
         return cls(cfg, scenario=scenario, mesh=mesh,
                    profile_dir=profile_dir)
+
+    @classmethod
+    def from_connectome(cls, cfg, dataset, scenario=None, mesh=None,
+                        profile_dir=None) -> "Simulator":
+        """A Simulator whose initial state is wired from a
+        ``workloads.datasets.ConnectomeDataset`` instead of empty tables
+        (DESIGN.md §13).
+
+        The dataset's row count must equal ``num_ranks *
+        cfg.neurons_per_rank`` (gid == global row), its excitation layout
+        must match the (cfg, scenario) population table per rank block
+        (checked eagerly), and no degree may exceed ``cfg.max_synapses``.
+        Under the sparse exchange the subscription registry is sized from
+        the MEASURED per-rank unique-remote-source count (baked into
+        ``cfg.subs_cap_base``; ``subs_cap_factor`` stays head-room on top)
+        so heavy-tailed degree distributions don't start life overflowing,
+        and the registry itself is derived through ``rebuild_exchange`` —
+        the exact per-chunk computation, so sparse == dense bit-identity
+        holds from the very first chunk."""
+        from repro.workloads import datasets as wds
+        wds.validate(dataset)
+        mesh = mesh if mesh is not None else engine.make_brain_mesh()
+        num_ranks = mesh.shape["ranks"]
+        n = cfg.neurons_per_rank
+        if dataset.num_neurons != num_ranks * n:
+            raise ValueError(
+                f"dataset {dataset.name!r} has {dataset.num_neurons} "
+                f"neurons; need num_ranks*neurons_per_rank = "
+                f"{num_ranks}*{n} = {num_ranks * n} (gid == global row)")
+        wds.check_population_layout(dataset, cfg, scenario, num_ranks)
+        if cfg.rate_exchange == "sparse" and cfg.subs_cap_base is None:
+            cfg = dataclasses.replace(
+                cfg, subs_cap_base=wds.max_unique_remote_sources(dataset, n))
+        sim = cls(cfg, scenario=scenario, mesh=mesh,
+                  profile_dir=profile_dir)
+        sim._install_connectome(dataset)
+        return sim
+
+    def _install_connectome(self, dataset) -> None:
+        """Overwrite the freshly initialized state's connectivity with the
+        dataset: positions, front-packed out/in edge tables, per-neuron
+        excitation, and synaptic-element counts covering the wired degrees
+        (each neuron keeps its seeded vacant draw ON TOP of the wired
+        elements, so the loaded connectome is homeostatically stable — the
+        first update grows from it rather than retracting it)."""
+        from repro.workloads import datasets as wds
+        with telemetry.span("sim.from_connectome",
+                            neurons=dataset.num_neurons,
+                            edges=dataset.num_edges):
+            out_e, in_e = wds.edge_tables(dataset, self.cfg.max_synapses)
+            st = self.init()
+            sh = self.shardings()
+            out_deg = (out_e >= 0).sum(1).astype(np.float32)
+            in_deg = (in_e >= 0).sum(1).astype(np.float32)
+            vac_a = np.asarray(jax.device_get(st.neurons.ax_elements))
+            vac_d = np.asarray(jax.device_get(st.neurons.de_elements))
+            neurons = st.neurons._replace(
+                ax_elements=jax.device_put(vac_a + out_deg,
+                                           sh.neurons.ax_elements),
+                de_elements=jax.device_put(vac_d + in_deg,
+                                           sh.neurons.de_elements),
+                is_excitatory=jax.device_put(dataset.is_excitatory,
+                                             sh.neurons.is_excitatory))
+            self._state = st._replace(
+                neurons=neurons,
+                positions=jax.device_put(dataset.positions, sh.positions),
+                out_edges=jax.device_put(out_e, sh.out_edges),
+                in_edges=jax.device_put(in_e, sh.in_edges))
+            # derive subs/rate_slots/remote_rates from the installed
+            # in-edge table (rates are all zero, so the pushed buffer
+            # matches the dense table's zeros bit-for-bit)
+            self.rebuild_exchange()
 
     # ------------------------------------------------------------ state
     @property
@@ -122,6 +197,38 @@ class Simulator:
         with telemetry.span("sim.step"):
             self._state = self.chunk_fn(self.state)
         return self._state
+
+    def step_with(self, dyn):
+        """Advance one chunk with a ``phases.DynamicParams`` pytree fed as
+        a TRACED ARGUMENT (replicated leaves) — the host may change the
+        values between every chunk without a single retrace, which
+        ``dyn_compile_count`` asserts. This is the drive surface of the
+        assimilation loop (``workloads.assimilate``; ROADMAP item 5's
+        static/dynamic split, first slice). With ``dyn=None`` semantics
+        are ``step()``'s exactly (use that instead — the argument-free
+        trace is the bit-identity baseline)."""
+        if self._dyn_fn is None:
+            cfg, num_ranks, scn = self.cfg, self.num_ranks, self.scenario
+
+            def body(st, dyn):
+                rank = jax.lax.axis_index("ranks")
+                ctx = sim_phases.make_context(cfg, rank, "ranks", num_ranks,
+                                              scn, dyn=dyn)
+                return sim_phases.sim_chunk(st, ctx)
+
+            dyn_specs = jax.tree.map(lambda _: P(), dyn)
+            self._dyn_fn = jax.jit(compat.shard_map(
+                body, mesh=self.mesh, in_specs=(self.specs, dyn_specs),
+                out_specs=self.specs, check_vma=False), donate_argnums=(0,))
+        with telemetry.span("sim.step_with"):
+            self._state = self._dyn_fn(self.state, dyn)
+        return self._state
+
+    def dyn_compile_count(self) -> int:
+        """Number of compiled traces behind ``step_with`` — the
+        assimilation loop asserts this stays at 1 across a whole run
+        (retrace-free dynamic params)."""
+        return 0 if self._dyn_fn is None else self._dyn_fn._cache_size()
 
     def run(self, num_chunks: int, recorder: Optional[object] = None):
         """Advance ``num_chunks`` chunks as ONE jitted ``lax.scan`` with
@@ -305,6 +412,7 @@ class Simulator:
                 "num_ranks": self.num_ranks,
                 "neurons_per_rank": self.cfg.neurons_per_rank,
                 "subs_cap_factor": self.cfg.subs_cap_factor,
+                "subs_cap_base": self.cfg.subs_cap_base,
                 "requests_cap_factor": self.cfg.requests_cap_factor,
                 "lifecycle": dict(self.lifecycle)}
 

@@ -18,7 +18,7 @@ us).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +34,27 @@ from repro.sim import registry
 from repro.telemetry import metrics as telemetry_metrics
 
 
+class DynamicParams(NamedTuple):
+    """Runtime parameters a host loop may change between chunks WITHOUT
+    retracing — the first concrete slice of the static/dynamic config split
+    (ROADMAP item 5). Every leaf is a traced chunk-function ARGUMENT
+    (replicated, fed through ``Simulator.step_with``), never a Python
+    constant baked into the trace; shapes are fixed by the scenario's
+    region count, so new values reuse the compiled program.
+
+    ``region_drive``: (num_buckets,) f32 additive offset on the background
+    drive MEAN per region bucket (``regions.assign_regions`` order: named
+    regions first, the trailing 'rest' bucket last). Riding on ``bg_mean``
+    — already a per-neuron operand of ``step_core`` and the fused
+    megakernel — keeps both activity lowerings untouched."""
+    region_drive: Any
+
+    @staticmethod
+    def zeros(num_buckets: int) -> "DynamicParams":
+        return DynamicParams(
+            region_drive=jnp.zeros((num_buckets,), jnp.float32))
+
+
 @dataclass
 class PhaseContext:
     """Everything a phase implementation needs besides the BrainState.
@@ -41,10 +62,12 @@ class PhaseContext:
     ``rank`` is the traced ``lax.axis_index`` inside shard_map (or a
     concrete int in single-rank helpers); ``table`` is the per-neuron
     population parameter table; ``regions``/``events`` are the scenario's
-    static tuples (empty when scenario is None); ``metrics`` is the shared
-    ``telemetry.metrics.Recorder`` every registered phase implementation
-    records through (one jnp expression per quantity — the bit-identity
-    surface of DESIGN.md §9)."""
+    static tuples (empty when scenario is None); ``dyn`` is the traced
+    ``DynamicParams`` argument (None on the default, argument-free trace —
+    kept None rather than zeros so the seed trace stays bit-identical);
+    ``metrics`` is the shared ``telemetry.metrics.Recorder`` every
+    registered phase implementation records through (one jnp expression
+    per quantity — the bit-identity surface of DESIGN.md §9)."""
     cfg: Any
     rank: Any
     axis_name: Optional[str]
@@ -53,17 +76,18 @@ class PhaseContext:
     table: Any = None
     regions: Tuple = ()
     events: Tuple = ()
+    dyn: Optional[DynamicParams] = None
     metrics: Any = None
 
 
 def make_context(cfg, rank, axis_name, num_ranks: int,
-                 scenario=None) -> PhaseContext:
+                 scenario=None, dyn=None) -> PhaseContext:
     table = pops.table_for(cfg, scenario, cfg.neurons_per_rank)
     regions = scenario.regions if scenario is not None else ()
     events = scenario.events if scenario is not None else ()
     return PhaseContext(cfg=cfg, rank=rank, axis_name=axis_name,
                         num_ranks=num_ranks, scenario=scenario, table=table,
-                        regions=regions, events=events,
+                        regions=regions, events=events, dyn=dyn,
                         metrics=telemetry_metrics.Recorder(
                             n=cfg.neurons_per_rank))
 
@@ -80,6 +104,15 @@ def _window_inputs(state, ctx: PhaseContext):
     ca_consts = (cfg.calcium_decay, cfg.calcium_beta)
     bg_mean, bg_std = regions_mod.background_tables(state.positions,
                                                     ctx.regions, cfg)
+    if ctx.dyn is not None:
+        # dynamic per-region drive (DynamicParams.region_drive, a traced
+        # argument): lift bg_mean to (n,) and add each neuron's bucket
+        # offset — both lowerings already take bg_mean as a per-neuron
+        # operand, so new drive values never retrace
+        rid = regions_mod.assign_regions(state.positions, ctx.regions)
+        bg_mean = jnp.broadcast_to(
+            jnp.asarray(bg_mean, jnp.float32), rid.shape) \
+            + ctx.dyn.region_drive[rid]
     stim = proto.stim_tables(ctx.events, ctx.regions, state.positions) \
         if ctx.events else None
     lesions = proto.lesion_tables(ctx.events, ctx.regions, state.positions) \

@@ -89,6 +89,16 @@ def service_block(stats: dict, handles=None) -> dict:
     return out
 
 
+def quality_block(metrics: dict) -> dict:
+    """Serialize workload *function* metrics (repro.workloads — engram
+    recall overlap/selectivity, assimilation error): quality reported in
+    the same schema as the perf counters, so every bench row can carry
+    both speed and function (DESIGN.md §13). The same values also appear
+    as case metrics — the regression gate compares cases."""
+    return {k: float(v) for k, v in metrics.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+
 def histograms_block(metrics) -> dict:
     return {k: np.asarray(v).sum(axis=0).tolist()
             for k, v in metrics.hists.items()}
@@ -118,11 +128,14 @@ def make_report(bench: str, cases: Dict[str, dict], *, smoke: bool = False,
                 spans: Optional[list] = None,
                 roofline: Optional[dict] = None,
                 lifecycle: Optional[dict] = None,
-                service: Optional[dict] = None) -> dict:
+                service: Optional[dict] = None,
+                quality: Optional[dict] = None) -> dict:
     rep = {"schema": SCHEMA, "bench": bench, "smoke": bool(smoke),
            "cases": cases}
     if service is not None:
         rep["service"] = service
+    if quality is not None:
+        rep["quality"] = quality_block(quality)
     if mesh is not None:
         rep["mesh"] = mesh
     if counters is not None:

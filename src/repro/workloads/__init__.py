@@ -1,0 +1,43 @@
+"""repro.workloads — realistic workloads for the MSP brain (DESIGN.md §13).
+
+Everything the scenario library runs is synthetic; this package supplies
+the shapes the paper's machinery exists to serve:
+
+  datasets.py    versioned on-disk connectome format (npz: positions, typed
+                 edge list, region labels, per-neuron excitation) + the
+                 deterministic hemibrain-shaped surrogate generator
+                 (log-normal degrees, spatially clustered regions) and the
+                 edge-list -> (n, S) synapse-table builder behind
+                 ``Simulator.from_connectome``
+  engram.py      train-with-stimulus / lesion-the-cue pattern-completion
+                 workload (Tiddia et al., arXiv:2307.11735) reporting
+                 ``recall_overlap`` as a device-side quality observable
+  assimilate.py  host-driven rate-assimilation loop nudging per-region
+                 drive toward a target trace between chunks, through the
+                 retrace-free ``DynamicParams`` pytree (the first slice of
+                 the static/dynamic config split — ROADMAP item 5)
+
+Import is lazy (the modules pull in the full engine stack).
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "ConnectomeDataset": ("repro.workloads.datasets", "ConnectomeDataset"),
+    "generate_hemibrain_surrogate": (
+        "repro.workloads.datasets", "generate_hemibrain_surrogate"),
+    "save": ("repro.workloads.datasets", "save"),
+    "load": ("repro.workloads.datasets", "load"),
+    "EngramSpec": ("repro.workloads.engram", "EngramSpec"),
+    "run_engram": ("repro.workloads.engram", "run_engram"),
+    "AssimilationLoop": ("repro.workloads.assimilate", "AssimilationLoop"),
+}
+
+__all__ = sorted(_LAZY) + ["assimilate", "datasets", "engram"]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        module, attr = _LAZY[name]
+        return getattr(importlib.import_module(module), attr)
+    raise AttributeError(f"module 'repro.workloads' has no attribute {name!r}")

@@ -1,0 +1,252 @@
+"""repro.workloads: dataset round-trip, generator invariants,
+``from_connectome`` bit-identity, engram recall determinism across
+layouts/lowerings, retrace-free rate assimilation, and the measured
+subscription-cap sizing (DESIGN.md §13). Multi-rank bit-identity lives
+in tests/test_multidevice.py."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.msp_brain import SMOKE_CONFIG
+from repro.connectome import routing
+from repro.workloads import datasets as wds
+
+CFG = dataclasses.replace(SMOKE_CONFIG, requests_cap_factor=1000)
+N = CFG.neurons_per_rank   # single-rank in-process suite: N == n
+
+
+def _surrogate(**kw):
+    args = dict(num_neurons=N, block=N, max_degree=CFG.max_synapses,
+                fraction_excitatory=CFG.fraction_excitatory)
+    args.update(kw)
+    return wds.generate_hemibrain_surrogate(**args)
+
+
+# ------------------------------------------------------------- datasets
+def test_generator_deterministic_and_valid():
+    a, b = _surrogate(), _surrogate()
+    wds.validate(a)
+    for fa, fb in zip(a, b):
+        if isinstance(fa, np.ndarray):
+            np.testing.assert_array_equal(fa, fb)
+        else:
+            assert fa == fb
+    assert _surrogate(seed=1).num_edges != a.num_edges or not \
+        np.array_equal(_surrogate(seed=1).positions, a.positions)
+
+
+def test_generator_invariants():
+    ds = _surrogate(num_neurons=8 * N, avg_degree=4.0, degree_sigma=1.0)
+    out_deg, in_deg = ds.out_degrees(), ds.in_degrees()
+    # degrees respect the cap on both sides
+    assert out_deg.max() <= CFG.max_synapses
+    assert in_deg.max() <= CFG.max_synapses
+    # log-normal heavy tail: the max out-degree well clear of the median
+    assert out_deg.max() >= 2 * np.median(out_deg)
+    # excitation is periodic per rank block (the replicated-derivation
+    # population invariant), gid == global row
+    exc = ds.is_excitatory.reshape(-1, N)
+    np.testing.assert_array_equal(exc, np.broadcast_to(exc[0], exc.shape))
+    assert exc[0, :int(N * CFG.fraction_excitatory)].all()
+    assert not exc[0, int(N * CFG.fraction_excitatory):].any()
+    # every neuron sits inside its region's box
+    box = ds.region_boxes[ds.region_ids]
+    assert (ds.positions >= box[:, 0]).all() and \
+        (ds.positions < box[:, 1]).all()
+    # canonical (pre, post) edge order
+    order = np.lexsort((ds.edges[:, 1], ds.edges[:, 0]))
+    np.testing.assert_array_equal(order, np.arange(ds.num_edges))
+    # locality bias: most edges stay in-region
+    rsrc = ds.region_ids[ds.edges[:, 0]]
+    rtgt = ds.region_ids[ds.edges[:, 1]]
+    assert (rsrc == rtgt).mean() > 0.5
+
+
+def test_dataset_roundtrip_bit_identical_state(tmp_path):
+    from repro.sim.api import Simulator
+    ds = _surrogate()
+    path = str(tmp_path / "surrogate.npz")
+    wds.save(path, ds)
+    ds2 = wds.load(path)
+    for fa, fb in zip(ds, ds2):
+        if isinstance(fa, np.ndarray):
+            np.testing.assert_array_equal(fa, fb)
+        else:
+            assert fa == fb
+    st1 = Simulator.from_connectome(CFG, ds).state
+    st2 = Simulator.from_connectome(CFG, ds2).state
+    for a, b in ((st1.out_edges, st2.out_edges),
+                 (st1.in_edges, st2.in_edges),
+                 (st1.positions, st2.positions),
+                 (st1.neurons.ax_elements, st2.neurons.ax_elements),
+                 (st1.neurons.is_excitatory, st2.neurons.is_excitatory)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_load_rejects_future_format(tmp_path):
+    ds = _surrogate()
+    path = str(tmp_path / "surrogate.npz")
+    wds.save(path, ds)
+    with np.load(path, allow_pickle=False) as z:
+        fields = dict(z)
+    fields["format_version"] = np.int64(wds.FORMAT_VERSION + 1)
+    np.savez_compressed(path, **fields)
+    with pytest.raises(ValueError, match="format_version"):
+        wds.load(path)
+
+
+def test_from_connectome_checks_layout_and_degrees():
+    from repro.sim.api import Simulator
+    with pytest.raises(ValueError, match="population table"):
+        Simulator.from_connectome(
+            CFG, _surrogate(fraction_excitatory=0.5))
+    with pytest.raises(ValueError, match="max_synapses"):
+        wds.edge_tables(_surrogate(), CFG.max_synapses // 2)
+    with pytest.raises(ValueError, match="gid == global row"):
+        Simulator.from_connectome(
+            CFG, _surrogate(num_neurons=2 * N, block=N))
+
+
+def test_from_connectome_matches_dataset():
+    from repro.sim.api import Simulator
+    ds = _surrogate()
+    sim = Simulator.from_connectome(CFG, ds)
+    st = sim.state
+    out_e, in_e = wds.edge_tables(ds, CFG.max_synapses)
+    np.testing.assert_array_equal(np.asarray(st.out_edges), out_e)
+    np.testing.assert_array_equal(np.asarray(st.in_edges), in_e)
+    np.testing.assert_array_equal(np.asarray(st.positions), ds.positions)
+    # wired degrees are covered by the element counts, vacancy on top
+    ax = np.asarray(st.neurons.ax_elements)
+    assert (ax >= ds.out_degrees() + CFG.initial_vacant_low - 1e-5).all()
+
+
+def test_from_connectome_old_new_connectivity_identical():
+    """The paper claim holds when growth starts from a loaded connectome:
+    both connectivity algorithms rewire it identically."""
+    from repro.sim.api import Simulator
+    ds = _surrogate()
+    base = dataclasses.replace(CFG, spike_alg="old")
+    res = {}
+    for alg in ("old", "new"):
+        cfg = dataclasses.replace(base, connectivity_alg=alg)
+        sim = Simulator.from_connectome(cfg, ds)
+        for _ in range(3):
+            st = sim.step()
+        res[alg] = (np.sort(np.asarray(st.out_edges), 1),
+                    np.sort(np.asarray(st.in_edges), 1))
+    np.testing.assert_array_equal(res["old"][0], res["new"][0])
+    np.testing.assert_array_equal(res["old"][1], res["new"][1])
+
+
+# --------------------------------------------------------------- engram
+def _engram_metrics(**cfg_kw):
+    from repro.workloads import engram as weng
+    cfg = dataclasses.replace(CFG, **cfg_kw)
+    spec = weng.EngramSpec(train_chunks=2, rest_chunks=1, recall_chunks=1)
+    m, _ = weng.run_engram(cfg, spec=spec)
+    return m
+
+
+def test_engram_recall_deterministic_across_lowerings():
+    """recall_overlap is a function of the protocol, not of the layout or
+    lowering: dense == sparse exchange and reference == fused activity,
+    bit-identically."""
+    ref = _engram_metrics()
+    for kw in ({"rate_exchange": "sparse"},
+               {"activity_impl": "fused"},
+               {"rate_exchange": "sparse", "activity_impl": "fused"}):
+        m = _engram_metrics(**kw)
+        assert m == ref, (kw, m, ref)
+    assert 0.0 <= ref["recall_overlap"] <= 1.0
+    assert ref["target_neurons"] > 0 and ref["cue_neurons"] > 0
+
+
+def test_engram_from_connectome_runs():
+    from repro.workloads import engram as weng
+    spec = weng.EngramSpec(train_chunks=2, rest_chunks=1, recall_chunks=1)
+    m, sim = weng.run_engram(CFG, spec=spec, dataset=_surrogate())
+    assert 0.0 <= m["recall_overlap"] <= 1.0
+    assert sim.stats()["synapses_formed"] >= 0.0
+
+
+# ----------------------------------------------------------- assimilate
+def test_assimilation_converges_without_retrace():
+    from repro.workloads import assimilate as was
+    res, sim = was.run_assimilation(CFG, chunks=10, target_rate=0.02)
+    assert res.compile_count == 1, "dynamic params must not retrace"
+    assert res.abs_err[-1] < res.abs_err[0], \
+        (res.abs_err[0], res.abs_err[-1])
+    assert res.abs_err[-1] < 0.01
+    # the controller holds only the controlled bucket; the free rest
+    # bucket keeps its NaN target untouched
+    assert np.isnan(res.target[:, 1]).all()
+
+
+def test_assimilation_drop_region_recovery():
+    from repro.runtime import chaos
+    from repro.workloads import assimilate as was
+    hook = chaos.drop_region_input("driven", chunks=2, after_chunk=4)
+    res, _ = was.run_assimilation(CFG, chunks=14, hooks=[hook])
+    assert res.compile_count == 1
+    # the drop zeroes the region's drive: rate collapses in the window...
+    dropped = res.measured[4:6, 0]
+    assert (dropped < res.measured[3, 0] * 0.5).all(), res.measured[:, 0]
+    # ...and the applied drive actually cancelled the background
+    np.testing.assert_allclose(res.drive[4:6, 0], -CFG.background_mean)
+    # controller winds back up after the window
+    assert res.abs_err[-1] < res.abs_err[5], res.abs_err
+
+
+def test_step_with_matches_step_at_zero_drive():
+    """DynamicParams(0) through step_with is bit-identical to the static
+    step() trace — the dynamic path adds an input surface, not dynamics."""
+    import jax
+    from repro.sim import phases as sim_phases
+    from repro.sim.api import Simulator
+    from repro.workloads import assimilate as was
+    scn = was.default_scenario()
+    a = Simulator.from_config(CFG, scenario=scn)
+    b = Simulator.from_config(CFG, scenario=scn)
+    sa = a.step()
+    dyn = sim_phases.DynamicParams.zeros(2)
+    sb = b.step_with(dyn)
+    np.testing.assert_array_equal(np.asarray(sa.neurons.rate),
+                                  np.asarray(sb.neurons.rate))
+    np.testing.assert_array_equal(np.asarray(sa.out_edges),
+                                  np.asarray(sb.out_edges))
+    sb = b.step_with(dyn)
+    assert b.dyn_compile_count() == 1
+    np.testing.assert_array_equal(np.asarray(a.step().out_edges),
+                                  np.asarray(sb.out_edges))
+
+
+# ------------------------------------------------------------- cap_subs
+def test_cap_subs_measured_base():
+    cfg = dataclasses.replace(SMOKE_CONFIG, max_synapses=8,
+                              subs_cap_factor=2)
+    # default: n // R head-room (floor 32), times the factor, ceil to 8
+    assert routing.subs_base(cfg, 4) == max(64 // 4, 32)
+    assert routing.cap_subs(cfg, 4) == 32 * 2
+    # measured base replaces the synthetic default
+    meas = dataclasses.replace(cfg, subs_cap_base=41)
+    assert routing.subs_base(meas, 4) == 41
+    assert routing.cap_subs(meas, 4) == min(64 * 8, 3 * 64, -(-41 * 2 // 8) * 8)
+    # floor at 32, ceiling at (R-1)*n regardless of the measurement
+    tiny = dataclasses.replace(cfg, subs_cap_base=1)
+    assert routing.subs_base(tiny, 4) == 32
+    huge = dataclasses.replace(cfg, subs_cap_base=10_000)
+    assert routing.cap_subs(huge, 4) == 3 * 64
+
+
+def test_from_connectome_bakes_measured_base():
+    from repro.sim.api import Simulator
+    ds = _surrogate()
+    cfg = dataclasses.replace(CFG, rate_exchange="sparse")
+    sim = Simulator.from_connectome(cfg, ds)
+    assert sim.cfg.subs_cap_base == wds.max_unique_remote_sources(ds, N)
+    assert sim.ckpt_metadata()["subs_cap_base"] == sim.cfg.subs_cap_base
+    # single rank: no remote sources at all
+    assert sim.cfg.subs_cap_base == 0
+    assert float(sim.step().stats["subscription_overflow"].sum()) == 0.0
